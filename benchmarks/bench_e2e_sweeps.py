@@ -1,0 +1,75 @@
+"""Figures 12/13/14: MadEye vs oracle schemes across fps and networks,
+plus the per-task/object win breakdown."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import Query, Workload
+from repro.core.tradeoff import BudgetConfig
+from repro.serving import NetworkTrace
+from repro.serving.pipeline import run_madeye, run_scheme
+
+
+def _run_cell(cache, wl, fps, mbps, rtt_ms, *, pipelined=False):
+    video, tables = cache.video, cache.tables
+    acc = cache.workload(wl)
+    trace = NetworkTrace.fixed(mbps, rtt_ms, video.n_frames)
+    b = BudgetConfig(fps=fps, pipelined=pipelined)
+    m = run_madeye(video, wl, tables, b, trace, acc_table=acc)
+    bf = run_scheme(video, wl, tables, "best_fixed", budget=b,
+                    acc_table=acc)
+    bd = run_scheme(video, wl, tables, "best_dynamic", budget=b,
+                    acc_table=acc)
+    return m.accuracy, bf.accuracy, bd.accuracy
+
+
+def run(workload_names=("W1", "W4", "W7")) -> dict:
+    out = {}
+    print("\n== Fig 12: fps sweep @ {24 Mbps, 20 ms} ==")
+    for fps in (1, 5, 15, 30):
+        wins, gaps = [], []
+        for seed in common.VIDEO_SEEDS:
+            cache = common.acc_cache(seed)
+            for w in workload_names:
+                m, bf, bd = _run_cell(cache, common.WORKLOADS[w], fps, 24, 20)
+                wins.append(m - bf)
+                gaps.append(bd - m)
+        wm, _, _ = common.median_iqr(wins)
+        gm, _, _ = common.median_iqr(gaps)
+        print(f"  fps={fps:>2}: MadEye-best_fixed=+{wm*100:.1f}%  "
+              f"best_dynamic-MadEye={gm*100:.1f}%")
+        out[f"fps{fps}_win"] = wm
+
+    print("== Fig 13: network sweep @ 15 fps ==")
+    for mbps, rtt in ((24, 20), (40, 10), (60, 5)):
+        wins = []
+        for seed in common.VIDEO_SEEDS:
+            cache = common.acc_cache(seed)
+            for w in workload_names:
+                m, bf, _ = _run_cell(cache, common.WORKLOADS[w], 15, mbps,
+                                     rtt)
+                wins.append(m - bf)
+        wm, _, _ = common.median_iqr(wins)
+        print(f"  {{{mbps} Mbps, {rtt} ms}}: win=+{wm*100:.1f}%")
+        out[f"net{mbps}_win"] = wm
+
+    print("== Fig 14: win by task and object (5 fps) ==")
+    for task in ("binary", "count", "detect", "agg_count"):
+        for obj in ("person", "car"):
+            if task == "agg_count" and obj == "car":
+                continue
+            wins = []
+            for seed in common.VIDEO_SEEDS:
+                cache = common.acc_cache(seed)
+                wl = Workload((Query("yolov4", obj, task),))
+                m, bf, _ = _run_cell(cache, wl, 5, 24, 20)
+                wins.append(m - bf)
+            wm, _, _ = common.median_iqr(wins)
+            print(f"  {task:>10}/{obj:<6}: win=+{wm*100:.1f}%")
+            out[f"{task}_{obj}_win"] = wm
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Table 1: how many optimally-placed fixed cameras match MadEye-k?"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.tradeoff import BudgetConfig
+from repro.serving import NetworkTrace
+from repro.serving.pipeline import run_madeye_topk, run_scheme
+
+
+def run(workload_names=("W1", "W7")) -> dict:
+    fps, mbps, rtt = 5, 24, 20
+    out = {}
+    print("\n== Table 1: fixed-camera equivalence of MadEye-k ==")
+    for k in (1, 2, 3):
+        made, fixed_curves = [], []
+        for seed in common.VIDEO_SEEDS:
+            cache = common.acc_cache(seed)
+            for w in workload_names:
+                wl = common.WORKLOADS[w]
+                video, tables = cache.video, cache.tables
+                acc = cache.workload(wl)
+                trace = NetworkTrace.fixed(mbps, rtt, video.n_frames)
+                b = BudgetConfig(fps=fps)
+                made.append(run_madeye_topk(
+                    video, wl, tables, b, trace, k, acc_table=acc).accuracy)
+                curve = [run_scheme(video, wl, tables, "best_fixed", k=kk,
+                                    budget=b, acc_table=acc).accuracy
+                         for kk in range(1, 9)]
+                fixed_curves.append(curve)
+        m_acc = float(np.median(made))
+        curve = np.median(np.asarray(fixed_curves), axis=0)
+        # linear interpolation: #fixed cameras needed to match m_acc
+        n_fixed = 8.0
+        for i in range(len(curve)):
+            if curve[i] >= m_acc:
+                if i == 0:
+                    n_fixed = 1.0
+                else:
+                    lo, hi = curve[i - 1], curve[i]
+                    n_fixed = i + (m_acc - lo) / max(hi - lo, 1e-9)
+                break
+        resource = n_fixed / k
+        print(f"  MadEye-{k}: acc {m_acc:.3f} ~= {n_fixed:.1f} fixed "
+              f"cameras -> {resource:.1f}x resource reduction")
+        out[f"madeye{k}"] = {"acc": m_acc, "n_fixed": float(n_fixed),
+                             "reduction": float(resource)}
+    return out
+
+
+if __name__ == "__main__":
+    run()

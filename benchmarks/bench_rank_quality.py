@@ -1,0 +1,69 @@
+"""Figure 16 + §5.4 microbenchmarks: approximation-model rank quality.
+
+Compares MadEye's detector-style approximation (counts from boxes) against
+the count-CNN alternative (direct count regression — modeled as a noisier
+count estimate, the failure mode the paper measured), reporting the median
+rank assigned to the truly-best explored orientation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import rank as rank_mod
+from repro.serving.teachers import approx_observation
+
+
+def _best_rank(pred: np.ndarray, true: np.ndarray) -> int:
+    """Rank (1-based) the prediction assigns to the truly-best item."""
+    order = np.argsort(-pred, kind="stable")
+    best = int(np.argmax(true))
+    return int(np.where(order == best)[0][0]) + 1
+
+
+def run(n_explored: int = 6) -> dict:
+    rng = np.random.default_rng(0)
+    det_ranks, cnt_ranks, agree = [], [], []
+    for seed in common.VIDEO_SEEDS:
+        video, tables = common.substrate(seed)
+        key = ("yolov4", "person")
+        T = video.n_frames
+        for t in range(0, T, 3):
+            cells = rng.choice(common.GRID.n_cells, n_explored,
+                               replace=False)
+            true = np.array([tables[key].dets[1.0][t][c]["count"]
+                             for c in cells], float)
+            if true.max() == 0:
+                continue
+            # detector-style approx: boxes -> counts (miss-degraded)
+            det = np.array([approx_observation(
+                tables[key].dets[1.0][t][c], miss_rate=0.12,
+                seed_key=(t, c))["count"] for c in cells], float)
+            # count-CNN: global regression — relative noise grows with
+            # count (paper: "rank orderings extremely sensitive to small
+            # errors in count prediction")
+            noise = rng.normal(0, 0.75, n_explored)
+            cnt = np.maximum(true + noise, 0)
+            det_ranks.append(_best_rank(det, true))
+            cnt_ranks.append(_best_rank(cnt, true))
+            agree.append(_best_rank(det, true) == 1)
+
+    out = {
+        "detector_median_rank": float(np.median(det_ranks)),
+        "count_cnn_median_rank": float(np.median(cnt_ranks)),
+        "top1_agreement": float(np.mean(agree)),
+    }
+    print("\n== Fig 16: rank assigned to the best explored orientation ==")
+    print(f"  MadEye detector approx: median rank "
+          f"{out['detector_median_rank']:.1f} "
+          f"(p75 {np.percentile(det_ranks, 75):.1f}; paper: 1.1-1.3)")
+    print(f"  Count-CNN alternative : median rank "
+          f"{out['count_cnn_median_rank']:.1f} "
+          f"(p75 {np.percentile(cnt_ranks, 75):.1f})")
+    print(f"  top-1 agreement {out['top1_agreement']*100:.0f}% "
+          "(paper §5.4: explores best orientation 89.3%)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,150 @@
+"""Roofline analysis (§Roofline deliverable).
+
+Reads the dry-run artifacts (dryrun_results.json, produced by
+`python -m repro.launch.dryrun --all --both-meshes --out ...`) and derives
+the three per-cell roofline terms for TPU v5e:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis() reports post-SPMD *per-device* numbers — verified with a
+controlled sharded-matmul experiment; collective bytes are parsed from the
+per-device optimized HLO.)
+
+Also reports MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) and the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.configs import get_config, get_shape
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+RESULTS = os.environ.get("DRYRUN_JSON", "dryrun_results.json")
+ANALYSIS = os.environ.get("ANALYSIS_JSON", "roofline_analysis.json")
+
+# analytic active-param counts (billions) for MODEL_FLOPS
+_PARAMS_B = {
+    "kimi-k2-1t-a32b": (1043.0, 32.6),     # (total, active)
+    "deepseek-v3-671b": (671.0, 37.0),
+    "stablelm-12b": (12.1, 12.1),
+    "stablelm-3b": (2.8, 2.8),
+    "flux-dev": (11.9, 11.9),
+    "dit-l2": (0.46, 0.46),
+    "vit-b16": (0.086, 0.086),
+    "swin-b": (0.088, 0.088),
+    "vit-h14": (0.63, 0.63),
+    "vit-s16": (0.022, 0.022),
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole cell (global, fwd[+bwd])."""
+    cfg = get_config(arch)
+    shape = get_shape(cfg, shape_name)
+    total_b, active_b = _PARAMS_B[arch]
+    n_active = active_b * 1e9
+    if cfg.family == "lm":
+        tokens = shape.global_batch * max(shape.seq_len, 1)
+        if shape.kind == "train":
+            return 6.0 * n_active * tokens
+        if shape.kind == "prefill":
+            return 2.0 * n_active * tokens
+        return 2.0 * n_active * shape.global_batch   # decode: 1 tok/seq
+    if cfg.family == "vision":
+        if cfg.swin:
+            # hierarchical: stage s sees (res/4/2^s)^2 tokens with its own
+            # param count — 2 * sum_s params_s * tokens_s
+            f_img = 0.0
+            res0 = shape.img_res // cfg.patch
+            for s, (depth, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+                toks = (res0 // (2 ** s)) ** 2
+                params_s = depth * (4 * dim * dim + 2 * dim * 4 * dim)
+                f_img += 2.0 * params_s * toks
+            f = f_img * shape.global_batch
+        else:
+            # 2 * params * tokens per image (patch tokens + CLS)
+            n_tok = (shape.img_res // cfg.patch) ** 2 + 1
+            f = 2.0 * n_active * n_tok * shape.global_batch
+        return 3.0 * f if shape.kind == "train" else f
+    # diffusion: one forward per sampler step over latent tokens
+    lat = cfg.latent_res or cfg.img_res // 8
+    if cfg.latent_res and shape.img_res:
+        lat = cfg.latent_res * shape.img_res // cfg.img_res
+    elif shape.img_res:
+        lat = shape.img_res // 8
+    n_tok = (lat // cfg.patch) ** 2
+    f = 2.0 * n_active * n_tok * shape.global_batch
+    if shape.kind == "train":
+        return 3.0 * f
+    return f * shape.steps
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec["chips"]
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    t_coll = rec["collective_total"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec["flops"] * chips
+    return {
+        **rec,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / max(hlo_global, 1.0),
+        "roofline_frac": t_compute / max(t_compute, t_memory, t_coll),
+    }
+
+
+def run(mesh: str = "single") -> list:
+    if not os.path.exists(RESULTS):
+        print(f"  [skipped] {RESULTS} not found — run the dry-run first")
+        return []
+    with open(RESULTS) as f:
+        results = json.load(f)
+    # prefer exact unrolled-extrapolated metrics where available
+    analysis = {}
+    if os.path.exists(ANALYSIS):
+        with open(ANALYSIS) as f:
+            analysis = json.load(f)
+    rows = []
+    for key, rec in sorted(results.items()):
+        if "error" in rec or not key.endswith(f"|{mesh}"):
+            continue
+        a = analysis.get(key)
+        if a and "error" not in a:
+            rec = {**rec, "flops": a["flops"],
+                   "bytes_accessed": a["bytes_accessed"],
+                   "collective_total": a["collective_total"],
+                   "exact": True}
+        rows.append(roofline_row(rec))
+
+    print(f"\n== Roofline ({mesh}-pod mesh) ==")
+    print(f"  {'arch':<17} {'shape':<12} {'compute':>9} {'memory':>9} "
+          f"{'coll':>9} {'bound':>7} {'useful':>7} {'roofl%':>7}")
+    for r in rows:
+        print(f"  {r['arch']:<17} {r['shape']:<12} "
+              f"{r['t_compute_s']*1e3:8.2f}m {r['t_memory_s']*1e3:8.2f}m "
+              f"{r['t_collective_s']*1e3:8.2f}m {r['bottleneck']:>7} "
+              f"{min(r['useful_ratio'],9.99):7.2f} "
+              f"{r['roofline_frac']*100:6.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run("single")
+    run("multi")

@@ -1,0 +1,98 @@
+"""Figures 3/7/9/10/11: best-orientation dynamics statistics.
+
+Validates that the procedural scenes reproduce the regime the paper
+measured on real 360° videos: rapid temporal switching (Fig 3), short
+per-orientation best-durations (Fig 7), spatially local transitions
+(Fig 9), clustered top-k (Fig 10), and correlated neighbors (Fig 11).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(workload_names=("W1", "W6")) -> dict:
+    switch_gaps, dwell_totals, hop_dists, topk_spans = [], [], [], []
+    corr1, corr2 = [], []
+    fps = 15
+
+    for seed in common.VIDEO_SEEDS:
+        cache = common.acc_cache(seed)
+        for wname in workload_names:
+            acc = cache.workload(common.WORKLOADS[wname]).max(-1)  # [T, N]
+            T, N = acc.shape
+            best = acc.argmax(-1)
+
+            # Fig 3: time between switches
+            last = 0
+            for t in range(1, T):
+                if best[t] != best[t - 1]:
+                    switch_gaps.append((t - last) / fps)
+                    last = t
+
+            # Fig 7: total best-time per orientation
+            for c in range(N):
+                total = float((best == c).sum()) / fps
+                if total > 0:
+                    dwell_totals.append(total)
+
+            # Fig 9: spatial distance between successive bests
+            for t in range(1, T):
+                if best[t] != best[t - 1]:
+                    hop_dists.append(
+                        common.GRID.angular_distance[best[t - 1], best[t]])
+
+            # Fig 10: max pairwise distance among top-k
+            for t in range(0, T, 5):
+                for k in (2, 6):
+                    top = np.argsort(-acc[t])[:k]
+                    span = max(common.GRID.hop_distance[a, b]
+                               for a in top for b in top)
+                    topk_spans.append((k, span))
+
+            # Fig 11: neighbor correlation of accuracy deltas
+            deltas = np.diff(acc, axis=0)          # [T-1, N]
+            for i in range(N):
+                for j in range(i + 1, N):
+                    h = common.GRID.hop_distance[i, j]
+                    if h > 2:
+                        continue
+                    if deltas[:, i].std() < 1e-9 or deltas[:, j].std() < 1e-9:
+                        continue
+                    r = float(np.corrcoef(deltas[:, i], deltas[:, j])[0, 1])
+                    (corr1 if h == 1 else corr2).append(r)
+
+    out = {}
+    print("\n== Fig 3: time between best-orientation switches ==")
+    frac_1s = float(np.mean(np.asarray(switch_gaps) <= 1.0))
+    print(f"  switches <= 1 s since last: {frac_1s*100:.0f}% (paper: 85%)")
+    out["frac_switch_1s"] = frac_1s
+
+    print("== Fig 7: total best-time per orientation ==")
+    m, lo, hi = common.median_iqr(dwell_totals)
+    print(f"  median total best-time {m:.1f} s (paper: 5-6 s per 10-min; "
+          f"ours per {common.DURATION_S:.0f}-s video)")
+    out["median_dwell_s"] = m
+
+    print("== Fig 9: spatial distance of successive bests ==")
+    print(f"  median {np.median(hop_dists):.0f}°, p90 "
+          f"{np.percentile(hop_dists, 90):.0f}° (paper: 30°, 63.5°)")
+    out["median_hop_deg"] = float(np.median(hop_dists))
+
+    print("== Fig 10: top-k spatial clustering ==")
+    for k in (2, 6):
+        spans = [s for (kk, s) in topk_spans if kk == k]
+        print(f"  k={k}: p75 span {np.percentile(spans, 75):.0f} hops "
+              f"(paper: {1 if k == 2 else 2})")
+
+    print("== Fig 11: neighbor accuracy-delta correlation ==")
+    c1 = float(np.mean(corr1)) if corr1 else 0.0
+    c2 = float(np.mean(corr2)) if corr2 else 0.0
+    print(f"  1-hop {c1:.2f} (paper 0.83), 2-hop {c2:.2f} (paper 0.75)")
+    out["corr_1hop"], out["corr_2hop"] = c1, c2
+    return out
+
+
+if __name__ == "__main__":
+    run()

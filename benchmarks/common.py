@@ -1,0 +1,187 @@
+"""Shared benchmark substrate: videos, workloads W1-W10, cached tables.
+
+The paper evaluates 50 YouTube-derived videos x 10 workloads; offline we
+use procedurally generated scenes (repro/data) with seeds as "videos".
+Detection tables are built once per video for all 8 (model, object) pairs
+and shared across workloads/figures — the same amortization the paper
+gets from running every query on all orientations once (§2.2).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+from repro.core import DEFAULT_GRID, Query, Workload
+from repro.data import SceneConfig, build_video
+from repro.serving import detection_tables
+from repro.serving.accuracy import query_acc_table, workload_acc_table
+
+GRID = DEFAULT_GRID
+ZOOMS = (1.0, 2.0, 3.0)
+
+MODELS = ("ssd", "frcnn", "yolov4", "tiny-yolov4")
+OBJECTS = ("person", "car")
+ALL_PAIRS = tuple((m, o) for m in MODELS for o in OBJECTS)
+
+# quick mode (default): 3 videos x 20 s; full: 5 videos x 40 s
+QUICK = os.environ.get("BENCH_FULL", "") == ""
+VIDEO_SEEDS = (3, 7, 11) if QUICK else (3, 7, 11, 19, 23)
+DURATION_S = 20.0 if QUICK else 40.0
+
+
+def _wl(*rows) -> Workload:
+    return Workload(tuple(Query(m, o, t) for (m, o, t) in rows))
+
+
+# Appendix A.1, verbatim (people->person; task names canonicalized).
+WORKLOADS = {
+    "W1": _wl(("ssd", "person", "agg_count"),
+              ("frcnn", "car", "binary"),
+              ("ssd", "person", "count"),
+              ("yolov4", "person", "detect"),
+              ("frcnn", "person", "detect")),
+    "W2": _wl(("yolov4", "person", "agg_count"),
+              ("tiny-yolov4", "person", "agg_count"),
+              ("tiny-yolov4", "person", "detect"),
+              ("yolov4", "person", "binary"),
+              ("tiny-yolov4", "person", "agg_count"),
+              ("frcnn", "person", "count"),
+              ("frcnn", "person", "detect"),
+              ("frcnn", "car", "count"),
+              ("yolov4", "person", "agg_count"),
+              ("yolov4", "person", "detect"),
+              ("yolov4", "person", "count"),
+              ("tiny-yolov4", "person", "agg_count"),
+              ("yolov4", "car", "count"),
+              ("yolov4", "car", "detect"),
+              ("tiny-yolov4", "car", "count"),
+              ("ssd", "person", "binary"),
+              ("frcnn", "car", "count"),
+              ("ssd", "car", "count")),
+    "W3": _wl(("ssd", "car", "binary"),
+              ("frcnn", "person", "agg_count"),
+              ("frcnn", "person", "count"),
+              ("tiny-yolov4", "person", "binary"),
+              ("tiny-yolov4", "person", "binary"),
+              ("tiny-yolov4", "person", "agg_count"),
+              ("yolov4", "person", "count"),
+              ("frcnn", "person", "agg_count"),
+              ("ssd", "person", "binary"),
+              ("frcnn", "car", "count"),
+              ("ssd", "car", "count")),
+    "W4": _wl(("tiny-yolov4", "car", "count"),
+              ("frcnn", "car", "detect"),
+              ("frcnn", "person", "agg_count")),
+    "W5": _wl(("tiny-yolov4", "car", "count"),
+              ("ssd", "car", "count"),
+              ("frcnn", "person", "agg_count")),
+    "W6": _wl(("tiny-yolov4", "person", "agg_count"),
+              ("tiny-yolov4", "person", "binary"),
+              ("ssd", "car", "count"),
+              ("yolov4", "person", "agg_count"),
+              ("tiny-yolov4", "person", "count"),
+              ("frcnn", "car", "binary"),
+              ("ssd", "person", "detect"),
+              ("frcnn", "car", "detect"),
+              ("frcnn", "person", "agg_count"),
+              ("yolov4", "car", "count"),
+              ("tiny-yolov4", "person", "agg_count"),
+              ("frcnn", "person", "detect"),
+              ("ssd", "person", "agg_count"),
+              ("yolov4", "car", "detect")),
+    "W7": _wl(("yolov4", "person", "binary"),
+              ("ssd", "person", "detect"),
+              ("tiny-yolov4", "car", "binary"),
+              ("tiny-yolov4", "person", "detect"),
+              ("ssd", "person", "binary"),
+              ("ssd", "person", "agg_count"),
+              ("tiny-yolov4", "person", "detect"),
+              ("ssd", "car", "count"),
+              ("ssd", "person", "count"),
+              ("frcnn", "person", "count"),
+              ("yolov4", "person", "count"),
+              ("frcnn", "person", "binary"),
+              ("tiny-yolov4", "person", "agg_count"),
+              ("frcnn", "person", "agg_count"),
+              ("frcnn", "car", "count"),
+              ("yolov4", "car", "binary")),
+    "W8": _wl(("frcnn", "car", "count"),
+              ("tiny-yolov4", "person", "binary"),
+              ("yolov4", "person", "agg_count"),
+              ("yolov4", "car", "count"),
+              ("tiny-yolov4", "person", "agg_count"),
+              ("frcnn", "person", "agg_count"),
+              ("yolov4", "person", "agg_count"),
+              ("frcnn", "car", "count"),
+              ("ssd", "car", "count"),
+              ("frcnn", "car", "count"),
+              ("ssd", "car", "binary"),
+              ("yolov4", "car", "binary"),
+              ("ssd", "car", "binary"),
+              ("ssd", "person", "count"),
+              ("yolov4", "person", "count"),
+              ("yolov4", "car", "binary"),
+              ("frcnn", "person", "agg_count"),
+              ("ssd", "car", "detect")),
+    "W9": _wl(("tiny-yolov4", "person", "agg_count"),
+              ("frcnn", "person", "count"),
+              ("frcnn", "person", "count"),
+              ("tiny-yolov4", "car", "detect"),
+              ("tiny-yolov4", "person", "binary"),
+              ("yolov4", "person", "detect"),
+              ("frcnn", "person", "count"),
+              ("yolov4", "person", "agg_count"),
+              ("ssd", "person", "agg_count")),
+    "W10": _wl(("frcnn", "person", "agg_count"),
+               ("frcnn", "car", "count"),
+               ("frcnn", "person", "count")),
+}
+
+_ALL_PAIR_WL = Workload(tuple(
+    Query(m, o, "count") for (m, o) in ALL_PAIRS))
+
+
+@functools.lru_cache(maxsize=8)
+def substrate(seed: int, duration_s: float = DURATION_S, fps: int = 15):
+    """(video, tables-for-all-8-pairs) — cached per video seed."""
+    video = build_video(GRID, SceneConfig(fps=fps, seed=seed), duration_s)
+    tables = detection_tables(video, _ALL_PAIR_WL, ZOOMS)
+    return video, tables
+
+
+class AccCache:
+    """Per-video cache of query/workload accuracy tables."""
+
+    def __init__(self, video, tables):
+        self.video = video
+        self.tables = tables
+        self._q = {}
+
+    def query(self, model: str, obj: str, task: str) -> np.ndarray:
+        key = (model, obj, task)
+        if key not in self._q:
+            self._q[key] = query_acc_table(
+                self.video, self.tables[(model, obj)],
+                task if task != "agg_count" else "count", ZOOMS)
+        return self._q[key]
+
+    def workload(self, wl: Workload) -> np.ndarray:
+        acc = None
+        for q in wl.queries:
+            t = self.query(q.model, q.obj, q.task)
+            acc = t if acc is None else acc + t
+        return acc / len(wl.queries)
+
+
+@functools.lru_cache(maxsize=8)
+def acc_cache(seed: int, duration_s: float = DURATION_S) -> AccCache:
+    video, tables = substrate(seed, duration_s)
+    return AccCache(video, tables)
+
+
+def median_iqr(values) -> tuple:
+    v = np.asarray(sorted(values), float)
+    return (float(np.median(v)), float(np.percentile(v, 25)),
+            float(np.percentile(v, 75)))

@@ -1,0 +1,60 @@
+"""Benchmark driver — one entry per paper table/figure.
+
+Prints a `name,us_per_call,derived` CSV row per benchmark (us_per_call =
+wall time of the benchmark harness; derived = its headline metric).
+
+  PYTHONPATH=src python -m benchmarks.run            # quick substrate
+  BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_deepdive,
+        bench_e2e_sweeps,
+        bench_fixed_cameras,
+        bench_orientation_gains,
+        bench_rank_quality,
+        bench_roofline,
+        bench_scene_stats,
+        bench_sota,
+    )
+
+    rows = []
+
+    def timed(name, fn, derive):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((name, dt, derive(out)))
+        return out
+
+    timed("fig1_2_orientation_gains", bench_orientation_gains.run,
+          lambda o: f"dyn_over_fixed=+{o['dyn_over_fixed']*100:.1f}%")
+    timed("fig3_7_9_10_11_scene_stats", bench_scene_stats.run,
+          lambda o: f"corr1hop={o['corr_1hop']:.2f}")
+    timed("fig12_13_14_e2e_sweeps", bench_e2e_sweeps.run,
+          lambda o: f"fps1_win=+{o['fps1_win']*100:.1f}%")
+    timed("fig15_table2_sota", bench_sota.run,
+          lambda o: f"madeye={o['madeye']:.3f}")
+    timed("table1_fixed_cameras", bench_fixed_cameras.run,
+          lambda o: f"madeye1_reduction={o['madeye1']['reduction']:.1f}x")
+    timed("fig16_rank_quality", bench_rank_quality.run,
+          lambda o: f"median_rank={o['detector_median_rank']:.1f}")
+    timed("sec5_4_deepdive", bench_deepdive.run,
+          lambda o: f"path_us={o['path_us']:.0f}")
+    timed("roofline_single", lambda: bench_roofline.run("single"),
+          lambda o: f"cells={len(o)}")
+    timed("roofline_multi", lambda: bench_roofline.run("multi"),
+          lambda o: f"cells={len(o)}")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

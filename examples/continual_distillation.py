@@ -1,0 +1,113 @@
+"""Continual distillation with orientation-balanced replay (paper §3.2).
+
+    PYTHONPATH=src python examples/continual_distillation.py
+
+Simulates the backend's continual-learning loop: the camera keeps
+visiting a drifting hotspot, fresh teacher labels arrive only for visited
+orientations, and the replay buffer pads neighbors (<=3 hops) so the
+student doesn't catastrophically forget the rest of the grid. Compares
+rank quality of balanced vs naive (fresh-only) retraining.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import DEFAULT_GRID, Query, Workload
+from repro.core import continual
+from repro.core.distill import spearman, teacher_labels
+from repro.data import SceneConfig, build_video, render_image
+from repro.models import detector as det
+from repro.serving import detection_tables
+
+GRID = DEFAULT_GRID
+RES = 64
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(video, tables, samples, cfg):
+    imgs, bxs, cls, vld = [], [], [], []
+    for (t, c) in samples:
+        imgs.append(render_image(video.snapshots[t], GRID, c, 1.0, res=RES))
+        d = tables[("yolov4", "person")].dets[1.0][t][c]
+        tgt = teacher_labels([d["boxes"]], [np.zeros(len(d["boxes"]), int)],
+                             cfg.max_boxes)
+        bxs.append(tgt.boxes[0])
+        cls.append(tgt.classes[0])
+        vld.append(tgt.valid[0])
+    return (jnp.asarray(np.stack(imgs)), jnp.asarray(np.stack(bxs)),
+            jnp.asarray(np.stack(cls)), jnp.asarray(np.stack(vld)))
+
+
+def rank_quality(params, cfg, video, tables, rng, n_eval=40):
+    """Spearman correlation between NN counts and teacher counts across
+    random orientation sets."""
+    from repro.serving.engine import InferenceEngine
+    engine = InferenceEngine(cfg, params)
+    rhos = []
+    for _ in range(n_eval):
+        t = int(rng.integers(0, video.n_frames))
+        cells = rng.choice(GRID.n_cells, 6, replace=False)
+        true = np.array([tables[("yolov4", "person")].dets[1.0][t][int(c)]
+                         ["count"] for c in cells], float)
+        if true.max() == 0:
+            continue
+        imgs = np.stack([render_image(video.snapshots[t], GRID, int(c),
+                                      1.0, res=RES) for c in cells])
+        counts, _ = engine.counts_and_areas(jnp.asarray(imgs))
+        rhos.append(spearman(np.asarray(counts, float), true))
+    return float(np.mean(rhos))
+
+
+def main():
+    cfg = get_smoke_config("madeye-approx")
+    workload = Workload((Query("yolov4", "person", "count"),))
+    print("building scene...")
+    video = build_video(GRID, SceneConfig(fps=15, seed=21), 10.0)
+    tables = detection_tables(video, workload)
+    rng = np.random.default_rng(0)
+
+    # visit trace: the camera dwells hard on two cells (severe imbalance —
+    # the paper's 9.3%-coverage regime)
+    visit_trace = []
+    for t in range(0, video.n_frames, 2):
+        visit_trace.append((t, 12 if (t // 30) % 2 == 0 else 13))
+
+    for mode in ("balanced", "naive"):
+        params = det.detector_init(KEY, cfg)
+        opt = continual.init_finetune(params)
+        buffer = continual.ReplayBuffer(GRID.n_cells)
+        # bootstrap history: the paper's initial fine-tuning set covers
+        # every orientation — that is what balanced replay pads from
+        for c0 in range(GRID.n_cells):
+            for tb in (0, 5, 10):
+                buffer.add(c0, (tb, c0))
+        window_counts = np.zeros(GRID.n_cells, int)
+        trained_cells = set()
+        for (t, c) in visit_trace:
+            buffer.add(c, (t, c))
+            window_counts[c] += 1
+            if t % 15 != 0:
+                continue
+            if mode == "balanced":
+                samples = continual.sample_balanced(
+                    buffer, window_counts, c, GRID, max_total=16)
+            else:
+                samples = buffer.recent(c, 16)
+            if not samples:
+                continue
+            trained_cells.update(cc for (_, cc) in samples)
+            batch = make_batch(video, tables, samples, cfg)
+            for _ in range(3):
+                params, opt, loss = continual.finetune_step(
+                    params, opt, cfg, *batch, lr=3e-3)
+            window_counts[:] = 0
+        rho = rank_quality(params, cfg, video, tables,
+                           np.random.default_rng(1))
+        print(f"{mode:>9} replay: rank quality (Spearman) = {rho:+.3f}  "
+              f"(trained on {len(trained_cells)}/{GRID.n_cells} "
+              f"orientations)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Train a reduced LM end-to-end with the full substrate: AdamW, cosine
+schedule, fault-tolerant checkpointing with restart, straggler watchdog.
+
+    PYTHONPATH=src python examples/train_lm.py
+
+This is the CPU-scale version of launch/train.py's cluster loop: a few
+hundred steps of the stablelm-family smoke config on synthetic token
+streams; kill it mid-run and re-run to watch it resume from the last
+atomic checkpoint.
+"""
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeSpec
+from repro.launch.train import synthetic_batch, train_loop
+
+CKPT = "/tmp/repro_train_lm_ckpt"
+
+
+def main():
+    cfg = get_smoke_config("stablelm-3b")
+    shape = ShapeSpec("example", "train", seq_len=64, global_batch=8)
+    print(f"training {cfg.name} ({cfg.n_layers}L d{cfg.d_model}) "
+          f"for 200 steps, ckpt -> {CKPT}")
+    t0 = time.time()
+    params, opt = train_loop(cfg, shape, steps=200, lr=3e-3,
+                             ckpt_dir=CKPT, ckpt_every=50, log_every=25)
+    print(f"done in {time.time()-t0:.0f}s")
+
+    # quick eval: loss on a held-out batch must be below init loss
+    from repro.models.transformer import lm_loss
+    key = jax.random.PRNGKey(123)
+    batch = synthetic_batch(cfg, shape, key)
+    final = float(lm_loss(params, cfg, batch["tokens"], batch["labels"]))
+    print(f"held-out loss {final:.3f} (random-init baseline ~{np.log(cfg.vocab):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Architecture configs. Importing this package registers all architectures."""
+from repro.configs import (  # noqa: F401
+    kimi_k2_1t_a32b,
+    deepseek_v3_671b,
+    stablelm_12b,
+    stablelm_3b,
+    flux_dev,
+    dit_l2,
+    vit_b16,
+    swin_b,
+    vit_h14,
+    vit_s16,
+    madeye_approx,
+)
+from repro.configs.base import (  # noqa: F401
+    DetectorConfig,
+    DiffusionConfig,
+    LMConfig,
+    ShapeSpec,
+    VisionConfig,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)
+from repro.configs.shapes import (  # noqa: F401
+    DIFFUSION_SHAPES,
+    FAMILY_SHAPES,
+    LM_SHAPES,
+    VISION_SHAPES,
+    get_shape,
+    shapes_for,
+)
+
+ALL_MODULES = True
+
+ASSIGNED_ARCHS = [
+    "kimi-k2-1t-a32b",
+    "deepseek-v3-671b",
+    "stablelm-12b",
+    "stablelm-3b",
+    "flux-dev",
+    "dit-l2",
+    "vit-b16",
+    "swin-b",
+    "vit-h14",
+    "vit-s16",
+]

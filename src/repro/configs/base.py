@@ -1,0 +1,169 @@
+"""Config dataclasses + registry for all assigned architectures.
+
+Every architecture file in this package registers:
+  - its FULL config (exact paper/source numbers; exercised only via the
+    dry-run with ShapeDtypeStruct — never allocated on CPU), and
+  - a SMOKE config (same family, tiny dims) that runs a real forward/train
+    step on CPU in the per-arch smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    max_seq: int = 8192
+    rope_theta: float = 10000.0
+    # MoE (None => dense)
+    moe_experts: Optional[int] = None
+    moe_top_k: int = 8
+    moe_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None          # per-expert hidden dim
+    first_dense_layers: int = 0             # e.g. deepseek: first k layers dense
+    # MLA (None => GQA)
+    mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # numerics / schedule
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    tie_embeddings: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def family(self) -> str:
+        return "lm"
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    # Swin-specific
+    swin: bool = False
+    window: int = 7
+    depths: tuple = ()
+    dims: tuple = ()
+    dtype: Any = jnp.bfloat16
+    remat: bool = False
+
+    @property
+    def family(self) -> str:
+        return "vision"
+
+
+@dataclass(frozen=True)
+class DiffusionConfig:
+    name: str
+    img_res: int
+    patch: int = 2
+    latent_channels: int = 4
+    n_layers: int = 0                # DiT
+    n_double_blocks: int = 0         # MMDiT
+    n_single_blocks: int = 0
+    d_model: int = 1024
+    n_heads: int = 16
+    latent_res: Optional[int] = None  # flux operates on latents
+    cond_dim: int = 768              # text/conditioning embedding width (stub)
+    n_classes: int = 1000            # DiT class conditioning
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def family(self) -> str:
+        return "diffusion"
+
+    @property
+    def is_mmdit(self) -> bool:
+        return self.n_double_blocks > 0
+
+
+@dataclass(frozen=True)
+class DetectorConfig:
+    """MadEye approximation model: light ViT backbone + anchor-free det heads."""
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 2               # {person, car}
+    max_boxes: int = 32              # static box budget per frame
+    fpn_dim: int = 128
+    dtype: Any = jnp.float32
+    remat: bool = False
+
+    @property
+    def family(self) -> str:
+        return "detector"
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell for an architecture family."""
+    name: str
+    kind: str                         # train | prefill | decode | generate | serve
+    seq_len: int = 0
+    global_batch: int = 0
+    img_res: int = 0
+    steps: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Any] = {}
+_SMOKE: dict[str, Any] = {}
+
+
+def register(cfg, smoke=None):
+    _REGISTRY[cfg.name] = cfg
+    if smoke is not None:
+        _SMOKE[cfg.name] = smoke
+    return cfg
+
+
+def get_config(name: str):
+    if name not in _REGISTRY:
+        # import all config modules lazily on first miss
+        import repro.configs  # noqa: F401  (triggers registration)
+        from repro.configs import ALL_MODULES  # noqa: F401
+    return _REGISTRY[name]
+
+
+def get_smoke_config(name: str):
+    if name not in _SMOKE:
+        import repro.configs  # noqa: F401
+    return _SMOKE[name]
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,35 @@
+"""MadEye approximation model (the paper's EfficientDet-D0 analogue, TPU-native).
+
+ViT-S-class backbone (frozen across queries, cached on cameras) + FPN-lite neck
++ anchor-free center/box/class heads (fine-tuned per query). ~4M params to match
+EfficientDet-D0's 3.9M budget.
+"""
+from repro.configs.base import DetectorConfig, register
+
+FULL = DetectorConfig(
+    name="madeye-approx",
+    img_res=224,
+    patch=16,
+    n_layers=6,
+    d_model=192,
+    n_heads=6,
+    d_ff=768,
+    n_classes=2,
+    max_boxes=32,
+    fpn_dim=128,
+)
+
+SMOKE = DetectorConfig(
+    name="madeye-approx-smoke",
+    img_res=64,
+    patch=16,
+    n_layers=2,
+    d_model=48,
+    n_heads=3,
+    d_ff=96,
+    n_classes=2,
+    max_boxes=8,
+    fpn_dim=32,
+)
+
+register(FULL, SMOKE)

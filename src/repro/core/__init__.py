@@ -1,0 +1,18 @@
+"""MadEye's primary contribution (paper §3) as composable modules.
+
+  grid.py       orientation grid geometry (pan x tilt x zoom)
+  ewma.py       EWMA orientation labels (JAX, fleet-vmappable)
+  search.py     contiguous-shape evolution (head/tail swap algorithm)
+  neighbor.py   bbox-centroid neighbor-candidate scoring
+  path.py       precomputed-MST TSP 2-approx reachability + path selection
+  zoom.py       bbox-clustering zoom controller (3 s auto zoom-out)
+  rank.py       per-task predicted workload accuracy + ranking
+  tradeoff.py   explore-vs-transmit budget balancer
+  continual.py  orientation-balanced replay + frozen-backbone fine-tuning
+  distill.py    teacher-label generation + rank-quality metrics
+  baselines.py  one-time/best-fixed/best-dynamic/Panoptes/tracking/UCB1
+  madeye.py     MadEyeController gluing it all per timestep
+"""
+from repro.core.grid import DEFAULT_GRID, OrientationGrid
+from repro.core.madeye import MadEyeController, Observation, StepResult
+from repro.core.rank import Query, Workload

@@ -1,0 +1,68 @@
+"""EWMA orientation labels (paper §3.3).
+
+Each orientation carries two exponentially weighted moving averages over
+the last ~10 timesteps: (1) predicted workload accuracy, and (2) the deltas
+between consecutive predicted accuracies. The label that drives shape
+evolution combines both — "remain robust to inconsistencies in DNN results
+across consecutive frames".
+
+Implemented as a pure-JAX pytree so a fleet of cameras vmaps over it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+WINDOW = 10
+ALPHA = 2.0 / (WINDOW + 1.0)
+
+
+class EWMAState(NamedTuple):
+    acc: jnp.ndarray        # [N] EWMA of predicted accuracy
+    delta: jnp.ndarray      # [N] EWMA of accuracy deltas
+    last: jnp.ndarray       # [N] last observed predicted accuracy
+    seen: jnp.ndarray       # [N] visit counts (float)
+
+
+def init_state(n_cells: int) -> EWMAState:
+    z = jnp.zeros((n_cells,), jnp.float32)
+    return EWMAState(z, z, z, z)
+
+
+def update(state: EWMAState, visited: jnp.ndarray,
+           acc_values: jnp.ndarray, alpha: float = ALPHA) -> EWMAState:
+    """visited [N] bool — cells explored this timestep;
+    acc_values [N] — predicted accuracy for visited cells (junk elsewhere).
+    """
+    v = visited.astype(jnp.float32)
+    first = (state.seen == 0) & visited
+    acc_new = jnp.where(first, acc_values,
+                        alpha * acc_values + (1 - alpha) * state.acc)
+    acc = jnp.where(visited, acc_new, state.acc)
+
+    d = acc_values - state.last
+    delta_new = jnp.where(first, 0.0, alpha * d + (1 - alpha) * state.delta)
+    delta = jnp.where(visited, delta_new, state.delta)
+
+    last = jnp.where(visited, acc_values, state.last)
+    seen = state.seen + v
+    return EWMAState(acc, delta, last, seen)
+
+
+def labels(state: EWMAState, *, delta_weight: float = 0.5,
+           eps: float = 1e-3) -> jnp.ndarray:
+    """Per-orientation potential for the next timestep (paper: EWMA of
+    values + EWMA of deltas). Strictly positive so head/tail ratios are
+    well-defined."""
+    raw = state.acc + delta_weight * state.delta
+    return jnp.maximum(raw, 0.0) + eps
+
+
+def decay_unvisited(state: EWMAState, visited: jnp.ndarray,
+                    rate: float = 0.98) -> EWMAState:
+    """Slight optimism decay for cells not visited this step: their EWMA
+    drifts toward the mean so stale highs don't pin the shape forever."""
+    acc = jnp.where(visited, state.acc, state.acc * rate)
+    return state._replace(acc=acc)

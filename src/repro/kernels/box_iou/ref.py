@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for box IoU + the NMS / matching consumers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cxcywh_to_corners(b: jnp.ndarray):
+    x0 = b[..., 0] - b[..., 2] * 0.5
+    y0 = b[..., 1] - b[..., 3] * 0.5
+    x1 = b[..., 0] + b[..., 2] * 0.5
+    y1 = b[..., 1] + b[..., 3] * 0.5
+    return x0, y0, x1, y1
+
+
+def box_iou_ref(boxes_a: jnp.ndarray, boxes_b: jnp.ndarray) -> jnp.ndarray:
+    """[N,4] x [M,4] cxcywh -> [N,M] IoU (f32)."""
+    ax0, ay0, ax1, ay1 = cxcywh_to_corners(boxes_a.astype(jnp.float32))
+    bx0, by0, bx1, by1 = cxcywh_to_corners(boxes_b.astype(jnp.float32))
+    ix0 = jnp.maximum(ax0[:, None], bx0[None, :])
+    iy0 = jnp.maximum(ay0[:, None], by0[None, :])
+    ix1 = jnp.minimum(ax1[:, None], bx1[None, :])
+    iy1 = jnp.minimum(ay1[:, None], by1[None, :])
+    inter = jnp.maximum(ix1 - ix0, 0.0) * jnp.maximum(iy1 - iy0, 0.0)
+    area_a = (ax1 - ax0) * (ay1 - ay0)
+    area_b = (bx1 - bx0) * (by1 - by0)
+    union = area_a[:, None] + area_b[None, :] - inter
+    return inter / jnp.maximum(union, 1e-9)

@@ -1,0 +1,147 @@
+"""Flash attention Pallas TPU kernel — tiled online-softmax.
+
+Target: TPU v5e MXU. Layout [B, H, S, D] with D padded to a multiple of 128
+(lane width) by the wrapper in ops.py. Grid = (B*H, num_q_blocks,
+num_k_blocks); the k axis is the innermost (sequential) grid dimension, so
+running max / denominator / accumulator live in VMEM scratch across k steps
+(the canonical TPU flash-attention pattern — "arbitrary" semantics on the
+b*h and q axes let Mosaic parallelize them, the k axis is declared
+sequential).
+
+VMEM budget per step (block_q=block_k=128, D=128, f32):
+  q 64 KiB + k 64 KiB + v 64 KiB + acc 64 KiB + m/l 2*64 KiB ≈ 384 KiB
+well under the ~16 MiB/core VMEM of v5e; block shapes are (128, 128)
+multiples so every matmul maps onto full MXU tiles.
+
+Causal blocks strictly above the diagonal are skipped with pl.when (no MXU
+work issued), recovering the ~2x causal saving.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128  # TPU lane width; scratch second-minor dim
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, q_offset: int, sq_valid: int,
+                  sk_valid: int, block_q: int, block_k: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + q_offset        # absolute position of q row 0
+    k_start = ki * block_k
+
+    # Causal: skip blocks entirely above the diagonal.
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, D]
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < sk_valid                          # padded K tail
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        s = jnp.where(mask, s, -jnp.inf)
+
+        m_prev = m_scr[:, 0]                            # [bq]
+        l_prev = l_scr[:, 0]
+        m_cur = jnp.max(s, axis=-1)                     # [bq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev),
+                          jnp.exp(m_prev - m_safe), 0.0)  # rescale old state
+
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc_scr[...] * alpha[:, None]
+        acc = acc + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+        acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        denom = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = False, q_offset: int = 0,
+                         scale: float | None = None, block_q: int = 128,
+                         block_k: int = 128, sq_valid: int | None = None,
+                         sk_valid: int | None = None,
+                         interpret: bool = True) -> jnp.ndarray:
+    """q [B,H,Sq,D], k/v [B,H,Sk,D] (same head count; GQA handled by ops.py).
+
+    Sq/Sk must be multiples of block_q/block_k (ops.py pads);
+    sq_valid/sk_valid give the pre-padding lengths.
+    """
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    sq_valid = sq_valid or Sq
+    sk_valid = sk_valid or Sk
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    nq = Sq // block_q
+    nk = Sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, q_offset=q_offset,
+        sq_valid=sq_valid, sk_valid=sk_valid, block_q=block_q,
+        block_k=block_k, nk=nk)
+
+    grid = (B * H, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda bh, qi, ki: (bh // H, bh % H, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda bh, qi, ki: (bh // H, bh % H, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # running max
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, D), jnp.float32),       # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out

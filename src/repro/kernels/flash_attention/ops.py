@@ -1,0 +1,59 @@
+"""jit'd public wrapper: BSHD layout, GQA head-sharing, padding to blocks.
+
+`flash_attention(q, k, v)` takes the model-side layout [B, S, H, D] with
+possibly fewer KV heads (GQA), pads sequence/head-dim to kernel block
+multiples, dispatches the Pallas kernel, and slices the result back.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "scale", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = False, q_offset: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """q [B,Sq,Hq,D], k/v [B,Sk,Hkv,D] (Hq % Hkv == 0) -> [B,Sq,Hq,D]."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    # BSHD -> BHSD
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1)
+
+    bq = min(block_q, max(8, 1 << (Sq - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (Sk - 1).bit_length()))
+    qt = _pad_to(qt, 2, bq)
+    kt = _pad_to(kt, 2, bk)
+    vt = _pad_to(vt, 2, bk)
+    # pad head dim to the 128-lane width (zero pads leave logits unchanged)
+    qt = _pad_to(qt, 3, 128)
+    kt = _pad_to(kt, 3, 128)
+    vt = _pad_to(vt, 3, 128)
+
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, q_offset=q_offset, scale=scale,
+        block_q=bq, block_k=bk, sq_valid=Sq, sk_valid=Sk,
+        interpret=interpret)
+    return out[:, :, :Sq, :D].transpose(0, 2, 1, 3).astype(q.dtype)

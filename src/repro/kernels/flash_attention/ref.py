@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = False, q_offset: int = 0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q [B,H,Sq,D], k/v [B,H,Sk,D] -> [B,H,Sq,D]. Exact masked softmax."""
+    D = q.shape[-1]
+    Sq, Sk = q.shape[2], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.frame_delta import ops, ref
+from repro.kernels.frame_delta.ops import apply_delta, frame_delta

@@ -1,0 +1,39 @@
+"""jit'd wrapper: padding to tile multiples + bytes-to-send estimate."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.frame_delta.frame_delta import frame_delta_tiles
+
+
+@partial(jax.jit, static_argnames=("tile_h", "tile_w", "tau", "scale",
+                                   "interpret"))
+def frame_delta(cur: jnp.ndarray, prev: jnp.ndarray, *, tile_h: int = 16,
+                tile_w: int = 128, tau: float = 0.02,
+                scale: float = 1.0 / 127.0, interpret: bool = True):
+    """cur/prev [H,W,C] float in [0,1].
+
+    Returns (delta_q [H,W,C] int8, changed [gh,gw] int32, bytes_est []).
+    bytes_est = changed tiles * tile bytes (int8 payload) + 4-byte tile map.
+    """
+    H, W, C = cur.shape
+    ph = (-H) % tile_h
+    pw = (-W) % tile_w
+    if ph or pw:
+        cur = jnp.pad(cur, ((0, ph), (0, pw), (0, 0)))
+        prev = jnp.pad(prev, ((0, ph), (0, pw), (0, 0)))
+    dq, changed = frame_delta_tiles(cur, prev, tile_h=tile_h, tile_w=tile_w,
+                                    tau=tau, scale=scale, interpret=interpret)
+    tile_bytes = tile_h * tile_w * C  # int8
+    bytes_est = jnp.sum(changed) * tile_bytes + changed.size // 8 + 4
+    return dq[:H, :W], changed, bytes_est
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def apply_delta(prev: jnp.ndarray, delta_q: jnp.ndarray, *,
+                scale: float = 1.0 / 127.0) -> jnp.ndarray:
+    """Decoder side: reconstruct cur ≈ prev + delta_q * scale."""
+    return prev + delta_q.astype(jnp.float32) * scale

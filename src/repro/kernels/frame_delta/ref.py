@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the frame-delta encoder."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def frame_delta_ref(cur: jnp.ndarray, prev: jnp.ndarray, *, tile_h: int = 16,
+                    tile_w: int = 128, tau: float = 0.02,
+                    scale: float = 1.0 / 127.0):
+    """Tile-wise delta quantization. cur/prev [H,W,C].
+
+    Returns (delta_q [H,W,C] int8, changed [H/th, W/tw] int32).
+    """
+    H, W, C = cur.shape
+    gh, gw = H // tile_h, W // tile_w
+    d = cur.astype(jnp.float32) - prev.astype(jnp.float32)
+    tiles = d.reshape(gh, tile_h, gw, tile_w, C).transpose(0, 2, 1, 3, 4)
+    changed = (jnp.mean(jnp.abs(tiles), axis=(2, 3, 4)) > tau)  # [gh, gw]
+    q = jnp.clip(jnp.round(tiles / scale), -127, 127).astype(jnp.int8)
+    q = jnp.where(changed[:, :, None, None, None], q, jnp.zeros_like(q))
+    delta_q = q.transpose(0, 2, 1, 3, 4).reshape(H, W, C)
+    return delta_q, changed.astype(jnp.int32)

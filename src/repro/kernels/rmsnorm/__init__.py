@@ -1,0 +1,2 @@
+from repro.kernels.rmsnorm import ops, ref
+from repro.kernels.rmsnorm.ops import rmsnorm

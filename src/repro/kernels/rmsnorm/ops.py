@@ -1,0 +1,33 @@
+"""jit'd wrapper: arbitrary leading dims, row padding, VMEM-aware block size."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_rows
+
+_VMEM_BUDGET = 4 * 1024 * 1024  # bytes for the activation tile (f32)
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, *, eps: float = 1e-6,
+            interpret: bool = True) -> jnp.ndarray:
+    """x [..., D], weight [D] -> RMS-normalized, same shape/dtype."""
+    D = x.shape[-1]
+    lead = x.shape[:-1]
+    T = 1
+    for s in lead:
+        T *= s
+    xt = x.reshape(T, D)
+
+    block_t = max(8, min(256, _VMEM_BUDGET // (4 * D)))
+    # round block down to a power of two for clean tiling
+    block_t = 1 << (block_t.bit_length() - 1)
+    pad = (-T) % block_t
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    out = rmsnorm_rows(xt, weight, eps=eps, block_t=block_t,
+                       interpret=interpret)
+    return out[:T].reshape(*lead, D)

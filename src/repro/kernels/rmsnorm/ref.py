@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray,
+                eps: float = 1e-6) -> jnp.ndarray:
+    """x [..., D], weight [D]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return y.astype(x.dtype)

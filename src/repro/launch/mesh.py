@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Single pod  = 16 x 16 = 256 chips  (axes: data, model)
+Multi-pod   = 2 x 16 x 16 = 512 chips (axes: pod, data, model)
+
+`pod` is the slow (DCN/inter-pod ICI) axis — pure data parallelism with
+optional gradient compression (train/compression.py). `data` carries DP +
+FSDP weight sharding; `model` carries TP / EP / SP.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh for unit tests (uses however many devices exist)."""
+    devices = jax.devices()[: n_data * n_model]
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         devices=devices)

@@ -1,0 +1,256 @@
+"""Per-(architecture x input-shape) step builders for the dry-run and the
+real launchers.
+
+`build_cell(arch, shape_name, mesh)` returns a CellSpec:
+  fn            — the pure function to jit (train_step / prefill / decode /
+                  forward / sampler)
+  args          — ShapeDtypeStruct stand-ins for every input (no alloc)
+  in_shardings / out_shardings — NamedSharding pytrees
+
+Conventions per family:
+  LM     train_*   -> full train step (fwd+bwd+optimizer update)
+         prefill_* -> last-token logits + filled KV cache
+         decode_*  -> one-token serve step against a seq_len cache
+         long_500k -> decode with a sequence-sharded (SP) cache
+  vision train shapes -> train step; serve_* -> jit'd forward
+  diff   train_*   -> train step; gen_* -> full sampler loop (steps fwds)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import (
+    DiffusionConfig,
+    LMConfig,
+    ShapeSpec,
+    VisionConfig,
+)
+from repro.distributed import sharding as shd
+from repro.models import diffusion as diff
+from repro.models import kvcache as kvc
+from repro.models import swin as swin_mod
+from repro.models import vit as vit_mod
+from repro.models.mmdit import TXT_TOKENS
+from repro.train import trainer
+
+KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+# giant-MoE training uses Adafactor (factored second moment); dense fits
+# AdamW comfortably
+_ADAFACTOR_ARCHS = {"kimi-k2-1t-a32b", "deepseek-v3-671b"}
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    static_kwargs: dict
+
+
+def _eval_shapes(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _param_and_opt_shapes(ts: trainer.TrainStep):
+    key = KEY_SDS
+    p_shape = jax.eval_shape(ts.init_params, key)
+    o_shape = jax.eval_shape(ts.init_opt, p_shape)
+    return p_shape, o_shape
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(cfg: LMConfig, shape: ShapeSpec, mesh: Mesh) -> CellSpec:
+    moe = bool(cfg.moe_experts)
+    if shape.kind == "train":
+        opt_name = ("adafactor" if cfg.name in _ADAFACTOR_ARCHS else "adamw")
+        ts = trainer.make_train_step(cfg, optimizer=opt_name)
+        p_shape, o_shape = _param_and_opt_shapes(ts)
+        batch = ts.batch_spec(shape)
+        p_sh = shd.param_shardings(p_shape, mesh)
+        o_sh = shd.opt_shardings(o_shape, mesh)
+        b_sh = shd.batch_shardings(batch, mesh)
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())}
+        return CellSpec(
+            cfg.name, shape.name, ts.step,
+            (p_shape, o_shape, batch, KEY_SDS),
+            (p_sh, o_sh, b_sh, NamedSharding(mesh, P())),
+            (p_sh, o_sh, metrics_sh), {})
+
+    if shape.kind == "prefill":
+        if moe:
+            fn = (kvc.mla_prefill if cfg.mla else kvc.moe_gqa_prefill)
+        else:
+            fn = kvc.gqa_prefill
+        from repro.models import moe_lm, transformer
+        init = (moe_lm.moe_lm_init if moe else transformer.lm_init)
+        p_shape = jax.eval_shape(lambda k: init(k, cfg), KEY_SDS)
+        tokens = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)
+        def step(params, tokens, _fn=fn):
+            return _fn(params, cfg, tokens, max_seq=shape.seq_len,
+                       last_only=True)
+        out_shape = jax.eval_shape(step, p_shape, tokens)
+        p_sh = shd.param_shardings(p_shape, mesh)
+        t_sh = shd.batch_shardings({"t": tokens}, mesh)["t"]
+        cache_sh = shd.kvcache_shardings(out_shape[1], mesh)
+        logits_sh = jax.tree.map(
+            lambda _: NamedSharding(
+                mesh, P(shd.dp_axes(mesh), None, "model")), out_shape[0])
+        return CellSpec(cfg.name, shape.name, step, (p_shape, tokens),
+                        (p_sh, t_sh), (logits_sh, cache_sh), {})
+
+    # decode cells (decode_32k, long_500k). REPRO_SP_THRESHOLD lowers the
+    # sequence-parallel cutoff (§Perf: SP also pays off at 32k decode once
+    # kv-heads don't divide the TP axis).
+    import os
+    sp_threshold = int(os.environ.get("REPRO_SP_THRESHOLD", "262144"))
+    seq_parallel = shape.seq_len >= sp_threshold
+    if moe:
+        step_fn = (kvc.mla_decode_step if cfg.mla else kvc.moe_gqa_decode_step)
+    else:
+        step_fn = kvc.gqa_decode_step
+    from repro.models import moe_lm, transformer
+    init = (moe_lm.moe_lm_init if moe else transformer.lm_init)
+    p_shape = jax.eval_shape(lambda k: init(k, cfg), KEY_SDS)
+    B = shape.global_batch
+    cache = kvc.cache_specs(cfg, B, shape.seq_len)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    def step(params, tok, cache, _fn=step_fn):
+        return _fn(params, cfg, tok, cache)
+    p_sh = shd.param_shardings(p_shape, mesh)
+    tok_sh = shd.batch_shardings({"t": token}, mesh)["t"]
+    cache_sh = shd.kvcache_shardings(cache, mesh,
+                                     sequence_parallel=seq_parallel)
+    logits_sh = NamedSharding(
+        mesh, P(shd.dp_axes(mesh) if B > 1 else None, None, "model"))
+    return CellSpec(cfg.name, shape.name, step, (p_shape, token, cache),
+                    (p_sh, tok_sh, cache_sh), (logits_sh, cache_sh), {})
+
+
+# ---------------------------------------------------------------------------
+# Vision cells
+# ---------------------------------------------------------------------------
+
+def _vision_cell(cfg: VisionConfig, shape: ShapeSpec, mesh: Mesh) -> CellSpec:
+    if shape.kind == "train":
+        # cls_384 fine-tunes at higher res — rebuild specs at that res
+        ts = trainer.make_train_step(cfg)
+        p_shape, o_shape = _param_and_opt_shapes(ts)
+        batch = ts.batch_spec(shape)
+        p_sh = shd.param_shardings(p_shape, mesh)
+        o_sh = shd.opt_shardings(o_shape, mesh)
+        b_sh = shd.batch_shardings(batch, mesh)
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())}
+        return CellSpec(cfg.name, shape.name, ts.step,
+                        (p_shape, o_shape, batch, KEY_SDS),
+                        (p_sh, o_sh, b_sh, NamedSharding(mesh, P())),
+                        (p_sh, o_sh, metrics_sh), {})
+
+    fwd = (swin_mod.swin_forward if cfg.swin else vit_mod.vit_forward)
+    init = (swin_mod.swin_init if cfg.swin else vit_mod.vit_init)
+    p_shape = jax.eval_shape(lambda k: init(k, cfg), KEY_SDS)
+    images = jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.img_res, shape.img_res, 3), jnp.float32)
+
+    def step(params, x):
+        return fwd(params, cfg, x)
+    p_sh = shd.param_shardings(p_shape, mesh)
+    i_sh = shd.batch_shardings({"x": images}, mesh)["x"]
+    out_sh = NamedSharding(
+        mesh, P(shd.dp_axes(mesh) if shape.global_batch > 1 else None, None))
+    return CellSpec(cfg.name, shape.name, step, (p_shape, images),
+                    (p_sh, i_sh), out_sh, {})
+
+
+# ---------------------------------------------------------------------------
+# Diffusion cells
+# ---------------------------------------------------------------------------
+
+def _diffusion_cell(cfg: DiffusionConfig, shape: ShapeSpec,
+                    mesh: Mesh) -> CellSpec:
+    if shape.kind == "train":
+        ts = trainer.make_train_step(cfg)
+        p_shape, o_shape = _param_and_opt_shapes(ts)
+        batch = ts.batch_spec(shape)
+        p_sh = shd.param_shardings(p_shape, mesh)
+        o_sh = shd.opt_shardings(o_shape, mesh)
+        b_sh = shd.batch_shardings(batch, mesh)
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())}
+        return CellSpec(cfg.name, shape.name, ts.step,
+                        (p_shape, o_shape, batch, KEY_SDS),
+                        (p_sh, o_sh, b_sh, NamedSharding(mesh, P())),
+                        (p_sh, o_sh, metrics_sh), {})
+
+    # generation cells: full sampler loop, `steps` backbone forwards
+    B = shape.global_batch
+    lat_res = (cfg.latent_res or cfg.img_res // 8)
+    if cfg.latent_res and shape.img_res:
+        lat_res = cfg.latent_res * shape.img_res // cfg.img_res
+    elif shape.img_res:
+        lat_res = shape.img_res // 8
+    from repro.models import dit as dit_mod
+    from repro.models import mmdit as mmdit_mod
+    if cfg.is_mmdit:
+        p_shape = jax.eval_shape(lambda k: mmdit_mod.mmdit_init(k, cfg),
+                                 KEY_SDS)
+        txt = jax.ShapeDtypeStruct((B, TXT_TOKENS, cfg.cond_dim),
+                                   jnp.float32)
+
+        def step(params, key, txt_emb):
+            return diff.rf_sample(params, cfg, key, batch=B,
+                                  n_steps=shape.steps, txt_emb=txt_emb,
+                                  latent_res=lat_res)
+
+        args = (p_shape, KEY_SDS, txt)
+        extra_sh = (shd.batch_shardings({"t": txt}, mesh)["t"],)
+    else:
+        p_shape = jax.eval_shape(lambda k: dit_mod.dit_init(k, cfg),
+                                 KEY_SDS)
+        y = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+        def step(params, key, labels):
+            return diff.dit_sample(params, cfg, key, batch=B,
+                                   n_steps=shape.steps, y=labels,
+                                   latent_res=lat_res)
+
+        args = (p_shape, KEY_SDS, y)
+        extra_sh = (shd.batch_shardings({"t": y}, mesh)["t"],)
+    p_sh = shd.param_shardings(p_shape, mesh)
+    dp = shd.dp_axes(mesh)
+    b_axis = dp if B % shd.axis_size(mesh, dp) == 0 else None
+    out_sh = NamedSharding(mesh, P(b_axis, None, None, None))
+    return CellSpec(cfg.name, shape.name, step, args,
+                    (p_sh, NamedSharding(mesh, P())) + extra_sh,
+                    out_sh, {})
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> CellSpec:
+    cfg = get_config(arch)
+    shape = get_shape(cfg, shape_name)
+    if cfg.family == "lm":
+        return _lm_cell(cfg, shape, mesh)
+    if cfg.family == "vision":
+        return _vision_cell(cfg, shape, mesh)
+    if cfg.family == "diffusion":
+        return _diffusion_cell(cfg, shape, mesh)
+    raise ValueError(cfg.family)

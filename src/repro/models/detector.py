@@ -1,0 +1,193 @@
+"""MadEye approximation model — TPU-native EfficientDet-D0 analogue.
+
+Paper §3.1: an ultra-lightweight detector for objects of interest, one per
+query, used ONLY to rank orientations. Design choices mirrored here:
+
+  * frozen feature extractor shared across queries (paper: EfficientDet
+    backbone + BiFPN frozen, pre-trained on VOC) -> here: a small ViT
+    backbone + FPN-lite neck whose params sit under ``params["backbone"]``
+    and are excluded from fine-tuning via `lax.stop_gradient` + optimizer
+    masking (train/optim.py);
+  * only the final box/class/centerness heads are per-query fine-tuned
+    (paper: "only weights for the final 3 bounding box and class prediction
+    layers");
+  * static box budget (max_boxes) — no dynamic shapes on TPU; outputs carry
+    a validity score instead of being pruned by NMS-with-dynamic-output.
+
+Output format (per image): boxes [max_boxes, 4] in [0,1] cxcywh,
+scores [max_boxes], class_probs [max_boxes, n_classes].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DetectorConfig, VisionConfig
+from repro.models import vit
+from repro.models.layers import (
+    Params,
+    conv2d,
+    conv_init,
+    linear,
+    linear_init,
+)
+
+
+class Detections(NamedTuple):
+    boxes: jnp.ndarray        # [..., max_boxes, 4] cxcywh in [0, 1]
+    scores: jnp.ndarray       # [..., max_boxes] objectness * class prob
+    class_probs: jnp.ndarray  # [..., max_boxes, n_classes]
+
+
+def _backbone_cfg(cfg: DetectorConfig) -> VisionConfig:
+    return VisionConfig(
+        name=f"{cfg.name}-backbone", img_res=cfg.img_res, patch=cfg.patch,
+        n_layers=cfg.n_layers, d_model=cfg.d_model, n_heads=cfg.n_heads,
+        d_ff=cfg.d_ff, n_classes=2, dtype=cfg.dtype)
+
+
+def detector_init(key, cfg: DetectorConfig) -> Params:
+    kb, kn, kh1, kh2, kh3 = jax.random.split(key, 5)
+    bcfg = _backbone_cfg(cfg)
+    F = cfg.fpn_dim
+    return {
+        # ---- frozen across queries (cached on cameras) ----
+        "backbone": {
+            "vit": vit.vit_init(kb, bcfg),
+            "neck": {
+                "lateral": conv_init(jax.random.fold_in(kn, 0), 1, 1,
+                                     cfg.d_model, F, dtype=cfg.dtype),
+                "smooth": conv_init(jax.random.fold_in(kn, 1), 3, 3, F, F,
+                                    dtype=cfg.dtype),
+            },
+        },
+        # ---- fine-tuned per query (paper: final 3 prediction layers) ----
+        "heads": {
+            "cls": conv_init(kh1, 3, 3, F, cfg.n_classes, dtype=cfg.dtype),
+            "box": conv_init(kh2, 3, 3, F, 4, dtype=cfg.dtype),
+            "obj": conv_init(kh3, 3, 3, F, 1, dtype=cfg.dtype),
+        },
+    }
+
+
+def detector_raw(params: Params, cfg: DetectorConfig, images: jnp.ndarray, *,
+                 freeze_backbone: bool = False):
+    """images [B,H,W,3] -> (cls_logits [B,g,g,K], box [B,g,g,4], obj [B,g,g]).
+
+    Box parametrization: sigmoid(dx,dy) = center offset inside the cell,
+    sigmoid(w,h) = size relative to the whole image.
+    """
+    bcfg = _backbone_cfg(cfg)
+    bb = params["backbone"]
+    if freeze_backbone:
+        bb = jax.lax.stop_gradient(bb)
+    feats = vit.vit_features(bb["vit"], bcfg, images)      # [B, g, g, D]
+    f = conv2d(bb["neck"]["lateral"], feats)
+    f = jax.nn.gelu(conv2d(bb["neck"]["smooth"], f))        # [B, g, g, F]
+
+    cls_logits = conv2d(params["heads"]["cls"], f)
+    box_raw = conv2d(params["heads"]["box"], f)
+    obj_logits = conv2d(params["heads"]["obj"], f)[..., 0]
+    return cls_logits, box_raw, obj_logits
+
+
+def decode_boxes(box_raw: jnp.ndarray) -> jnp.ndarray:
+    """[B,g,g,4] raw -> cxcywh in [0,1] (cell-relative center + global size)."""
+    B, g = box_raw.shape[0], box_raw.shape[1]
+    ys, xs = jnp.meshgrid(jnp.arange(g), jnp.arange(g), indexing="ij")
+    off = jax.nn.sigmoid(box_raw[..., :2])
+    cx = (xs[None] + off[..., 0]) / g
+    cy = (ys[None] + off[..., 1]) / g
+    wh = jax.nn.sigmoid(box_raw[..., 2:])
+    return jnp.stack([cx, cy, wh[..., 0], wh[..., 1]], axis=-1)
+
+
+def detector_forward(params: Params, cfg: DetectorConfig,
+                     images: jnp.ndarray) -> Detections:
+    """images [B,H,W,3] -> top-`max_boxes` Detections per image."""
+    cls_logits, box_raw, obj_logits = detector_raw(params, cfg, images)
+    B, g = cls_logits.shape[0], cls_logits.shape[1]
+    boxes = decode_boxes(box_raw).reshape(B, g * g, 4)
+    cls_probs = jax.nn.softmax(
+        cls_logits.reshape(B, g * g, -1).astype(jnp.float32), axis=-1)
+    obj = jax.nn.sigmoid(obj_logits.reshape(B, g * g).astype(jnp.float32))
+    scores = obj * jnp.max(cls_probs, axis=-1)
+
+    k = min(cfg.max_boxes, g * g)
+    top_scores, idx = jax.lax.top_k(scores, k)
+    top_boxes = jnp.take_along_axis(boxes, idx[..., None], axis=1)
+    top_probs = jnp.take_along_axis(cls_probs, idx[..., None], axis=1)
+    pad = cfg.max_boxes - k
+    if pad > 0:
+        top_scores = jnp.pad(top_scores, ((0, 0), (0, pad)))
+        top_boxes = jnp.pad(top_boxes, ((0, 0), (0, pad), (0, 0)))
+        top_probs = jnp.pad(top_probs, ((0, 0), (0, pad), (0, 0)))
+    return Detections(top_boxes, top_scores, top_probs)
+
+
+# ---------------------------------------------------------------------------
+# Training loss (distillation target = teacher boxes; see core/distill.py)
+# ---------------------------------------------------------------------------
+
+def detector_loss(params: Params, cfg: DetectorConfig, images: jnp.ndarray,
+                  gt_boxes: jnp.ndarray, gt_classes: jnp.ndarray,
+                  gt_valid: jnp.ndarray, *, freeze_backbone: bool = True):
+    """Anchor-free single-level loss.
+
+    gt_boxes [B,N,4] cxcywh; gt_classes [B,N] int; gt_valid [B,N] bool.
+    Each valid GT is assigned to the cell containing its center.
+    """
+    cls_logits, box_raw, obj_logits = detector_raw(
+        params, cfg, images, freeze_backbone=freeze_backbone)
+    B, g = cls_logits.shape[0], cls_logits.shape[1]
+    K = cls_logits.shape[-1]
+
+    # Assign GT to cells: cell index of each GT center
+    cx, cy = gt_boxes[..., 0], gt_boxes[..., 1]
+    ci = jnp.clip((cx * g).astype(jnp.int32), 0, g - 1)
+    cj = jnp.clip((cy * g).astype(jnp.int32), 0, g - 1)
+    cell = cj * g + ci                                   # [B, N]
+
+    # Build dense targets [B, g*g, ...] via scatter (last valid GT wins).
+    obj_t = jnp.zeros((B, g * g))
+    cls_t = jnp.zeros((B, g * g), jnp.int32)
+    box_t = jnp.zeros((B, g * g, 4))
+
+    bidx = jnp.arange(B)[:, None].repeat(gt_boxes.shape[1], 1)
+    v = gt_valid.astype(jnp.float32)
+    safe_cell = jnp.where(gt_valid, cell, 0)
+    obj_t = obj_t.at[bidx, safe_cell].max(v)
+    cls_t = cls_t.at[bidx, safe_cell].set(
+        jnp.where(gt_valid, gt_classes, cls_t[bidx, safe_cell]))
+    box_t = box_t.at[bidx, safe_cell].set(
+        jnp.where(gt_valid[..., None], gt_boxes, box_t[bidx, safe_cell]))
+
+    obj_logits = obj_logits.reshape(B, g * g).astype(jnp.float32)
+    cls_logits = cls_logits.reshape(B, g * g, K).astype(jnp.float32)
+    pred_boxes = decode_boxes(box_raw).reshape(B, g * g, 4)
+
+    # focal-style objectness BCE
+    p = jax.nn.sigmoid(obj_logits)
+    bce = -(obj_t * jnp.log(p + 1e-8) + (1 - obj_t) * jnp.log(1 - p + 1e-8))
+    focal_w = jnp.where(obj_t > 0, (1 - p) ** 2, p ** 2)
+    obj_loss = jnp.mean(focal_w * bce)
+
+    # class CE + box L1 on positive cells only
+    pos = obj_t                                          # [B, g*g]
+    n_pos = jnp.maximum(jnp.sum(pos), 1.0)
+    logp = jax.nn.log_softmax(cls_logits, axis=-1)
+    cls_loss = -jnp.sum(
+        pos * jnp.take_along_axis(logp, cls_t[..., None], axis=-1)[..., 0]
+    ) / n_pos
+    box_loss = jnp.sum(
+        pos[..., None] * jnp.abs(pred_boxes - box_t)) / n_pos
+
+    return obj_loss + cls_loss + box_loss
+
+
+def head_params_mask(params: Params) -> Params:
+    """Pytree mask: True for fine-tuned (head) leaves, False for backbone."""
+    return jax.tree.map(lambda _: False, params) | {
+        "heads": jax.tree.map(lambda _: True, params["heads"])}

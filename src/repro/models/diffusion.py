@@ -1,0 +1,117 @@
+"""Diffusion training losses + samplers (DDPM for DiT, rectified flow for Flux).
+
+The denoising loop runs one backbone forward per sampler step — a 50-step
+sampler is 50 forwards (per the pool note). `sample_*` wraps the loop in
+`lax.fori_loop`/`lax.scan` so the compiled artifact contains the step count.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig
+from repro.models.dit import dit_forward
+from repro.models.mmdit import TXT_TOKENS, mmdit_forward
+
+
+# ---------------------------------------------------------------------------
+# DDPM schedule (DiT): linear beta, epsilon prediction
+# ---------------------------------------------------------------------------
+
+def ddpm_schedule(n_steps: int = 1000, beta_0: float = 1e-4,
+                  beta_T: float = 0.02):
+    betas = jnp.linspace(beta_0, beta_T, n_steps, dtype=jnp.float32)
+    alphas = 1.0 - betas
+    abar = jnp.cumprod(alphas)
+    return {"betas": betas, "alphas": alphas, "alpha_bars": abar}
+
+
+def dit_train_loss(params, cfg: DiffusionConfig, latents: jnp.ndarray,
+                   y: jnp.ndarray, key, *, n_steps: int = 1000):
+    """Epsilon-prediction MSE. latents [B,R,R,C] clean; y [B] labels."""
+    B = latents.shape[0]
+    sched = ddpm_schedule(n_steps)
+    kt, ke = jax.random.split(key)
+    t = jax.random.randint(kt, (B,), 0, n_steps)
+    eps = jax.random.normal(ke, latents.shape, dtype=jnp.float32)
+    ab = sched["alpha_bars"][t][:, None, None, None]
+    x_t = jnp.sqrt(ab) * latents.astype(jnp.float32) + jnp.sqrt(1 - ab) * eps
+    pred = dit_forward(params, cfg, x_t.astype(cfg.dtype),
+                       t.astype(jnp.float32), y).astype(jnp.float32)
+    return jnp.mean(jnp.square(pred - eps))
+
+
+def dit_sample(params, cfg: DiffusionConfig, key, *, batch: int,
+               n_steps: int = 50, train_steps: int = 1000,
+               y: jnp.ndarray | None = None, latent_res: int | None = None):
+    """DDIM sampler (eta=0): n_steps forwards. Returns latents [B,R,R,C]."""
+    R = latent_res or cfg.latent_res or cfg.img_res // 8
+    C = cfg.latent_channels
+    sched = ddpm_schedule(train_steps)
+    if y is None:
+        y = jnp.zeros((batch,), jnp.int32)
+    ts = jnp.linspace(train_steps - 1, 0, n_steps).astype(jnp.int32)
+
+    x = jax.random.normal(key, (batch, R, R, C), dtype=jnp.float32)
+
+    def step(x, i):
+        t = ts[i]
+        t_prev = jnp.where(i + 1 < n_steps, ts[jnp.minimum(i + 1, n_steps - 1)], 0)
+        ab_t = sched["alpha_bars"][t]
+        ab_p = jnp.where(i + 1 < n_steps, sched["alpha_bars"][t_prev], 1.0)
+        eps = dit_forward(params, cfg, x.astype(cfg.dtype),
+                          jnp.full((batch,), t, jnp.float32),
+                          y).astype(jnp.float32)
+        x0 = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+        x = jnp.sqrt(ab_p) * x0 + jnp.sqrt(1 - ab_p) * eps
+        return x, None
+
+    from repro.models.layers import scan_unroll
+    x, _ = jax.lax.scan(step, x, jnp.arange(n_steps), unroll=scan_unroll())
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Rectified flow (Flux): velocity prediction, straight-line paths
+# ---------------------------------------------------------------------------
+
+def rf_train_loss(params, cfg: DiffusionConfig, latents: jnp.ndarray,
+                  txt_emb: jnp.ndarray, key):
+    """Rectified-flow MSE on velocity. latents [B,R,R,C] clean."""
+    B = latents.shape[0]
+    kt, ke = jax.random.split(key)
+    # logit-normal timestep sampling (SD3/Flux practice)
+    t = jax.nn.sigmoid(jax.random.normal(kt, (B,)))
+    noise = jax.random.normal(ke, latents.shape, dtype=jnp.float32)
+    x1 = latents.astype(jnp.float32)
+    tb = t[:, None, None, None]
+    x_t = (1 - tb) * noise + tb * x1
+    target_v = x1 - noise
+    pred = mmdit_forward(params, cfg, x_t.astype(cfg.dtype), t,
+                         txt_emb).astype(jnp.float32)
+    return jnp.mean(jnp.square(pred - target_v))
+
+
+def rf_sample(params, cfg: DiffusionConfig, key, *, batch: int,
+              n_steps: int = 50, txt_emb: jnp.ndarray | None = None,
+              latent_res: int | None = None):
+    """Euler integration of the learned velocity field: n_steps forwards."""
+    R = latent_res or cfg.latent_res or cfg.img_res // 8
+    C = cfg.latent_channels
+    if txt_emb is None:
+        txt_emb = jnp.zeros((batch, TXT_TOKENS, cfg.cond_dim), jnp.float32)
+    x = jax.random.normal(key, (batch, R, R, C), dtype=jnp.float32)
+    dt = 1.0 / n_steps
+
+    def step(x, i):
+        t = i.astype(jnp.float32) * dt
+        v = mmdit_forward(params, cfg, x.astype(cfg.dtype),
+                          jnp.full((batch,), t, jnp.float32),
+                          txt_emb).astype(jnp.float32)
+        return x + dt * v, None
+
+    from repro.models.layers import scan_unroll
+    x, _ = jax.lax.scan(step, x, jnp.arange(n_steps), unroll=scan_unroll())
+    return x

@@ -1,0 +1,133 @@
+"""DiT-L/2 (adaLN-zero) — Peebles & Xie, arXiv:2212.09748. Pure JAX.
+
+Operates on latents [B, latent_res, latent_res, C] (latent_res = img_res/8
+for a stub VAE; the pool treats the backbone as the deliverable).
+Conditioning = timestep + class label embeddings (adaLN-zero modulation).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    Params,
+    conv2d,
+    conv_init,
+    layernorm,
+    linear,
+    linear_init,
+    mlp,
+    mlp_init,
+    modulated_layernorm,
+    scan_layers,
+    stack_init,
+    trunc_normal,
+)
+
+
+def timestep_embedding(t: jnp.ndarray, dim: int,
+                       max_period: float = 10000.0) -> jnp.ndarray:
+    """t [B] (float timesteps) -> [B, dim] sinusoidal embedding."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb
+
+
+def dit_block_init(key, cfg: DiffusionConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.d_model
+    return {
+        "attn": attn.gqa_init(k1, D, cfg.n_heads, cfg.n_heads, bias=True,
+                              dtype=cfg.dtype),
+        "mlp": mlp_init(k2, D, 4 * D, dtype=cfg.dtype),
+        # adaLN-zero: 6 modulation vectors; final layer zero-init
+        "ada": {"w": jnp.zeros((D, 6 * D), dtype=cfg.dtype),
+                "b": jnp.zeros((6 * D,), dtype=cfg.dtype)},
+    }
+
+
+def dit_block(p: Params, x: jnp.ndarray, c: jnp.ndarray,
+              cfg: DiffusionConfig) -> jnp.ndarray:
+    """x [B,T,D]; c [B,D] conditioning."""
+    mod = linear(p["ada"], jax.nn.silu(c))            # [B, 6D]
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod[:, None, :], 6, axis=-1)
+    h = modulated_layernorm({}, x, sh1, sc1)
+    h = attn.gqa_attention(p["attn"], h, n_heads=cfg.n_heads,
+                           n_kv_heads=cfg.n_heads, angles=None, causal=False)
+    x = x + g1 * h
+    h = modulated_layernorm({}, x, sh2, sc2)
+    x = x + g2 * mlp(p["mlp"], h)
+    return x
+
+
+def dit_init(key, cfg: DiffusionConfig) -> Params:
+    latent_res = cfg.latent_res or cfg.img_res // 8
+    n_tokens = (latent_res // cfg.patch) ** 2
+    keys = jax.random.split(key, 8)
+    D = cfg.d_model
+    C = cfg.latent_channels
+    return {
+        "patch_embed": conv_init(keys[0], cfg.patch, cfg.patch, C, D,
+                                 dtype=cfg.dtype),
+        "pos_embed": trunc_normal(keys[1], (1, n_tokens, D), dtype=cfg.dtype),
+        "t_mlp": {
+            "fc1": linear_init(keys[2], 256, D, dtype=cfg.dtype),
+            "fc2": linear_init(keys[3], D, D, dtype=cfg.dtype),
+        },
+        "y_embed": trunc_normal(keys[4], (cfg.n_classes + 1, D),
+                                dtype=cfg.dtype),  # +1 = CFG null class
+        "layers": stack_init(keys[5], cfg.n_layers,
+                             lambda k: dit_block_init(k, cfg)),
+        "final_ada": {"w": jnp.zeros((D, 2 * D), dtype=cfg.dtype),
+                      "b": jnp.zeros((2 * D,), dtype=cfg.dtype)},
+        "final_proj": linear_init(keys[6], D, cfg.patch * cfg.patch * C,
+                                  std=0.0, dtype=cfg.dtype),
+    }
+
+
+def dit_forward(params: Params, cfg: DiffusionConfig, latents: jnp.ndarray,
+                t: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """latents [B,R,R,C]; t [B] in [0,1000); y [B] class ids -> noise pred."""
+    B, R, _, C = latents.shape
+    p_sz = cfg.patch
+    g = R // p_sz
+
+    x = conv2d(params["patch_embed"], latents.astype(cfg.dtype),
+               stride=p_sz, padding="VALID").reshape(B, g * g, cfg.d_model)
+    pos = params["pos_embed"]
+    if pos.shape[1] != g * g:
+        # bilinear-resize the learned grid for off-train resolutions
+        g0 = int(round(pos.shape[1] ** 0.5))
+        grid = pos.reshape(1, g0, g0, -1)
+        grid = jax.image.resize(grid, (1, g, g, grid.shape[-1]), "bilinear")
+        pos = grid.reshape(1, g * g, -1)
+    x = x + pos.astype(x.dtype)
+
+    t_emb = timestep_embedding(t, 256)
+    c = linear(params["t_mlp"]["fc2"],
+               jax.nn.silu(linear(params["t_mlp"]["fc1"],
+                                  t_emb.astype(cfg.dtype))))
+    c = c + jnp.take(params["y_embed"], y, axis=0).astype(c.dtype)
+
+    def body(lp, carry, extra):
+        return dit_block(lp, carry, extra, cfg)
+
+    x = scan_layers(body, params["layers"], x, extra=c, remat=cfg.remat,
+                    remat_policy="dots_no_batch")
+
+    mod = linear(params["final_ada"], jax.nn.silu(c))
+    sh, sc = jnp.split(mod[:, None, :], 2, axis=-1)
+    x = modulated_layernorm({}, x, sh, sc)
+    x = linear(params["final_proj"], x)               # [B, g*g, p*p*C]
+    x = x.reshape(B, g, g, p_sz, p_sz, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, R, R, C)
+    return x

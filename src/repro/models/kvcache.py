@@ -1,0 +1,501 @@
+"""KV caches + prefill/decode serve steps for dense and MoE LMs.
+
+Two cache layouts:
+  - GQA cache: k/v [L, B, max_seq, Hkv, Dh]       (stablelm, kimi)
+  - MLA cache: kv_latent [L, B, max_seq, lora] + k_rope [L, B, max_seq, rope]
+    (deepseek) — the paper-exact compressed cache; decode uses the
+    weight-absorption trick so per-step FLOPs stay O(S·H·(lora+rope)).
+
+For `long_500k` the sequence axis of the cache is sharded over the `model`
+mesh axis (sequence parallelism); the attention contraction then produces
+sharded partial logits which GSPMD combines — a flash-decode-style split-S
+softmax (we lower the exact masked softmax; XLA's partitioner handles the
+cross-shard reduction).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    Params,
+    scan_unroll,
+    embedding,
+    linear,
+    mlp,
+    rmsnorm,
+)
+
+
+class GQACache(NamedTuple):
+    k: jnp.ndarray       # [L, B, S_max, Hkv, Dh]
+    v: jnp.ndarray       # [L, B, S_max, Hkv, Dh]
+    length: jnp.ndarray  # [] int32 — tokens currently valid
+
+
+class MLACache(NamedTuple):
+    kv_latent: jnp.ndarray  # [L, B, S_max, lora]
+    k_rope: jnp.ndarray     # [L, B, S_max, rope]
+    length: jnp.ndarray
+
+
+def init_gqa_cache(cfg: LMConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> GQACache:
+    Dh = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, Dh)
+    return GQACache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                    jnp.zeros((), jnp.int32))
+
+
+def init_mla_cache(cfg: LMConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        jnp.zeros((cfg.n_layers, batch, max_seq, cfg.kv_lora_rank), dtype),
+        jnp.zeros((cfg.n_layers, batch, max_seq, cfg.qk_rope_dim), dtype),
+        jnp.zeros((), jnp.int32))
+
+
+def cache_specs(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    if cfg.mla:
+        return MLACache(
+            jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, max_seq, cfg.kv_lora_rank), dtype),
+            jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, max_seq, cfg.qk_rope_dim), dtype),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    Dh = cfg.resolved_head_dim
+    s = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, Dh), dtype)
+    return GQACache(s, s, jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Masked decode attention over a cache slice
+# ---------------------------------------------------------------------------
+
+def _decode_attend(q, k_cache, v_cache, length, scale):
+    """q [B,1,Hq,D]; k/v [B,S,Hkv,D]; attend to positions < length + 1."""
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = (jnp.arange(S) <= length)[None, None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA decode step (dense blocks; used by stablelm + kimi attention part)
+# ---------------------------------------------------------------------------
+
+def _gqa_block_decode(lp: Params, x, k_cache, v_cache, length, cfg: LMConfig,
+                      angles_pos):
+    """One dense block at decode; returns (x, new_k_slice, new_v_slice)."""
+    B = x.shape[0]
+    Dh = cfg.resolved_head_dim
+    h = rmsnorm(lp["attn_norm"], x)
+    q = linear(lp["attn"]["wq"], h).reshape(B, 1, cfg.n_heads, Dh)
+    k = linear(lp["attn"]["wk"], h).reshape(B, 1, cfg.n_kv_heads, Dh)
+    v = linear(lp["attn"]["wv"], h).reshape(B, 1, cfg.n_kv_heads, Dh)
+    q = attn.apply_rope(q, angles_pos)
+    k = attn.apply_rope(k, angles_pos)
+
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, length, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, length, 0, 0))
+
+    o = _decode_attend(q, k_cache, v_cache, length, 1.0 / math.sqrt(Dh))
+    x = x + linear(lp["attn"]["wo"], o.reshape(B, 1, -1))
+    x = x + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x))
+    return x, k_cache, v_cache
+
+
+def gqa_decode_step(params: Params, cfg: LMConfig, token: jnp.ndarray,
+                    cache: GQACache):
+    """token [B,1] -> (logits [B,1,V], cache'). Dense LM only."""
+    B = token.shape[0]
+    x = embedding(params["embed"], token)
+    length = cache.length
+    pos_angles = attn.rope_frequencies(
+        cfg.resolved_head_dim, cache.k.shape[2], cfg.rope_theta)
+    angles_pos = jax.lax.dynamic_slice_in_dim(pos_angles, length, 1, axis=0)
+
+    def body(carry, layer_io):
+        x = carry
+        lp, kc, vc = layer_io
+        x, kc, vc = _gqa_block_decode(lp, x, kc, vc, length, cfg, angles_pos)
+        return x, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache.k, cache.v),
+        unroll=scan_unroll())
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(x.dtype)
+    else:
+        logits = linear(params["lm_head"], x)
+    return logits, GQACache(new_k, new_v, length + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA decode step with weight absorption (deepseek-family)
+# ---------------------------------------------------------------------------
+
+def _mla_block_decode(lp: Params, x, kv_lat_cache, k_rope_cache, length,
+                      cfg: LMConfig, angles_pos):
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rope, vd, lora = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                            cfg.v_head_dim, cfg.kv_lora_rank)
+    ap = lp["attn"]
+    h = rmsnorm(ap["attn_norm"], x) if "attn_norm" in ap else rmsnorm(
+        lp["attn_norm"], x)
+
+    q_lat = rmsnorm(ap["q_a_norm"], linear(ap["wq_a"], h))
+    q = linear(ap["wq_b"], q_lat).reshape(B, 1, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = attn.apply_rope(q_rope, angles_pos[:, : rope // 2])
+
+    kv_a = linear(ap["wkv_a"], h)                        # [B,1,lora+rope]
+    kv_lat = rmsnorm(ap["kv_a_norm"], kv_a[..., :lora])  # [B,1,lora]
+    k_rope_new = attn.apply_rope(
+        kv_a[..., lora:].reshape(B, 1, 1, rope), angles_pos[:, : rope // 2]
+    ).reshape(B, 1, rope)
+
+    kv_lat_cache = jax.lax.dynamic_update_slice(
+        kv_lat_cache, kv_lat.astype(kv_lat_cache.dtype), (0, length, 0))
+    k_rope_cache = jax.lax.dynamic_update_slice(
+        k_rope_cache, k_rope_new.astype(k_rope_cache.dtype), (0, length, 0))
+
+    # Weight absorption: w_kv_b [lora, H*(nope+vd)] split into K and V parts.
+    wkvb = ap["wkv_b"]["w"].reshape(lora, H, nope + vd)
+    w_k = wkvb[..., :nope]                              # [lora, H, nope]
+    w_v = wkvb[..., nope:]                              # [lora, H, vd]
+
+    # Project q_nope into latent space: q_lat' = q_nope @ w_k^T  [B,1,H,lora]
+    q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                       w_k.astype(jnp.float32))
+
+    scale = 1.0 / math.sqrt(nope + rope)
+    S = kv_lat_cache.shape[1]
+    logits = (jnp.einsum("bqhl,bsl->bhqs", q_abs,
+                         kv_lat_cache.astype(jnp.float32))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                           k_rope_cache.astype(jnp.float32))) * scale
+    valid = (jnp.arange(S) <= length)[None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsl->bqhl", w,
+                       kv_lat_cache.astype(jnp.float32))   # [B,1,H,lora]
+    o = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_v.astype(jnp.float32))
+
+    x = x + linear(ap["wo"], o.reshape(B, 1, H * vd).astype(x.dtype))
+    return x, kv_lat_cache, k_rope_cache
+
+
+def _moe_or_mlp(lp: Params, x, cfg: LMConfig):
+    from repro.models import moe as moe_mod
+    h = rmsnorm(lp["mlp_norm"], x)
+    if "moe" in lp:
+        y, _ = moe_mod.moe_ffn(lp["moe"], h, cfg)
+        return x + y
+    return x + mlp(lp["mlp"], h)
+
+
+def mla_decode_step(params: Params, cfg: LMConfig, token: jnp.ndarray,
+                    cache: MLACache):
+    """MoE-MLA decode (deepseek). token [B,1] -> (logits, cache')."""
+    B = token.shape[0]
+    x = embedding(params["embed"], token)
+    length = cache.length
+    S_max = cache.kv_latent.shape[2]
+    pos_angles = attn.rope_frequencies(cfg.qk_rope_dim, S_max, cfg.rope_theta)
+    angles_pos = jax.lax.dynamic_slice_in_dim(pos_angles, length, 1, axis=0)
+
+    n_dense = cfg.first_dense_layers
+    for i, lp in enumerate(params["dense_layers"]):
+        wrapped = {"attn": lp["attn"], "attn_norm": lp["attn_norm"]}
+        wrapped["attn"] = dict(lp["attn"])
+        wrapped["attn"]["attn_norm"] = lp["attn_norm"]
+        x, kv_l, k_r = _mla_block_decode(
+            {"attn": wrapped["attn"], "attn_norm": lp["attn_norm"],
+             "mlp_norm": lp["mlp_norm"], "mlp": lp["mlp"]},
+            x, cache.kv_latent[i], cache.k_rope[i], length, cfg, angles_pos)
+        cache = cache._replace(
+            kv_latent=cache.kv_latent.at[i].set(kv_l),
+            k_rope=cache.k_rope.at[i].set(k_r))
+        x = _moe_or_mlp({"mlp_norm": lp["mlp_norm"], "mlp": lp["mlp"]}, x, cfg)
+
+    moe_kv = cache.kv_latent[n_dense:]
+    moe_kr = cache.k_rope[n_dense:]
+
+    def body(carry, layer_io):
+        x = carry
+        lp, kvl, krp = layer_io
+        x, kvl, krp = _mla_block_decode(
+            {"attn": lp["attn"], "attn_norm": lp["attn_norm"]}, x, kvl, krp,
+            length, cfg, angles_pos)
+        x = _moe_or_mlp(lp, x, cfg)
+        return x, (kvl, krp)
+
+    x, (new_kvl, new_krp) = jax.lax.scan(
+        body, x, (params["moe_layers"], moe_kv, moe_kr),
+        unroll=scan_unroll())
+    kv_latent = jnp.concatenate([cache.kv_latent[:n_dense], new_kvl], axis=0)
+    k_rope = jnp.concatenate([cache.k_rope[:n_dense], new_krp], axis=0)
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = linear(params["lm_head"], x)
+    return logits, MLACache(kv_latent, k_rope, length + 1)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full-sequence forward that also fills the cache)
+# ---------------------------------------------------------------------------
+
+def gqa_prefill(params: Params, cfg: LMConfig, tokens: jnp.ndarray,
+                max_seq: int | None = None, *, last_only: bool = False):
+    """tokens [B,S] -> (logits [B,S,V], GQACache filled to S).
+
+    last_only=True computes logits for the final position only — serving
+    prefill needs just the first sampled token, and a [B,S,V] logits
+    tensor at 32k x 129k vocab is ~270 GB of pointless HBM traffic."""
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    Dh = cfg.resolved_head_dim
+    angles = attn.rope_frequencies(Dh, S, cfg.rope_theta)
+    x = embedding(params["embed"], tokens)
+
+    def body(carry, lp):
+        x = carry
+        h = rmsnorm(lp["attn_norm"], x)
+        q, k, v = attn.gqa_qkv(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads)
+        q = attn.apply_rope(q, angles)
+        k = attn.apply_rope(k, angles)
+        o = attn.sdpa(q, k, v, causal=True, impl="xla")
+        x = x + linear(lp["attn"]["wo"], o.reshape(B, S, -1))
+        x = x + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x))
+        return x, (k, v)
+
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    ) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(lambda c, lp: body_fn(c, lp), x,
+                               params["layers"], unroll=scan_unroll())
+
+    x = rmsnorm(params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(x.dtype)
+    else:
+        logits = linear(params["lm_head"], x)
+
+    pad = max_seq - S
+    k_cache = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(
+        jnp.bfloat16)
+    v_cache = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(
+        jnp.bfloat16)
+    return logits, GQACache(k_cache, v_cache, jnp.asarray(S, jnp.int32))
+
+
+def mla_prefill(params: Params, cfg: LMConfig, tokens: jnp.ndarray,
+                max_seq: int | None = None, *, last_only: bool = False):
+    """MoE-MLA prefill (deepseek). tokens [B,S] -> (logits, MLACache).
+
+    The cache stores only the compressed latent + rope'd key — per-token
+    cache bytes are (lora + rope) vs GQA's 2*Hkv*Dh, a 10-40x shrink.
+    """
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    lora, rope = cfg.kv_lora_rank, cfg.qk_rope_dim
+    nope, vd, H = cfg.qk_nope_dim, cfg.v_head_dim, cfg.n_heads
+    angles = attn.rope_frequencies(rope, S, cfg.rope_theta)
+    x = embedding(params["embed"], tokens)
+
+    def block(lp, x):
+        """Full MLA attention; returns (x, kv_lat [B,S,lora], k_rope [B,S,rope])."""
+        ap = lp["attn"]
+        h = rmsnorm(lp["attn_norm"], x)
+        q_lat = rmsnorm(ap["q_a_norm"], linear(ap["wq_a"], h))
+        q = linear(ap["wq_b"], q_lat).reshape(B, S, H, nope + rope)
+        q_nope, q_rope = q[..., :nope], q[..., nope:]
+        q_rope = attn.apply_rope(q_rope, angles[:, : rope // 2])
+
+        kv_a = linear(ap["wkv_a"], h)
+        kv_lat = rmsnorm(ap["kv_a_norm"], kv_a[..., :lora])
+        k_rope = attn.apply_rope(
+            kv_a[..., lora:].reshape(B, S, 1, rope), angles[:, : rope // 2])
+
+        kv = linear(ap["wkv_b"], kv_lat).reshape(B, S, H, nope + vd)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = attn.sdpa(q_full, k_full, v, causal=True, impl="xla",
+                      scale=1.0 / math.sqrt(nope + rope))
+        x = x + linear(ap["wo"], o.reshape(B, S, H * vd))
+        return x, kv_lat, k_rope.reshape(B, S, rope)
+
+    lat_list, rope_list = [], []
+    for lp in params["dense_layers"]:
+        x, kvl, krp = block(lp, x)
+        x = x + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x))
+        lat_list.append(kvl)
+        rope_list.append(krp)
+
+    from repro.models import moe as moe_mod
+
+    def body(carry, lp):
+        x = carry
+        x, kvl, krp = block(lp, x)
+        y, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["mlp_norm"], x), cfg)
+        return x + y, (kvl, krp)
+
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    ) if cfg.remat else body
+    x, (moe_lat, moe_rope) = jax.lax.scan(body_fn, x, params["moe_layers"],
+                                          unroll=scan_unroll())
+
+    x = rmsnorm(params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    logits = linear(params["lm_head"], x)
+
+    n_dense = cfg.first_dense_layers
+    if n_dense:
+        kv_latent = jnp.concatenate(
+            [jnp.stack(lat_list, axis=0), moe_lat], axis=0)
+        k_rope_all = jnp.concatenate(
+            [jnp.stack(rope_list, axis=0), moe_rope], axis=0)
+    else:
+        kv_latent, k_rope_all = moe_lat, moe_rope
+
+    pad = max_seq - S
+    kv_latent = jnp.pad(
+        kv_latent, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16)
+    k_rope_all = jnp.pad(
+        k_rope_all, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16)
+    return logits, MLACache(kv_latent, k_rope_all, jnp.asarray(S, jnp.int32))
+
+
+def moe_gqa_prefill(params: Params, cfg: LMConfig, tokens: jnp.ndarray,
+                    max_seq: int | None = None, *, last_only: bool = False):
+    """MoE-GQA prefill (kimi). tokens [B,S] -> (logits, GQACache)."""
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    Dh = cfg.resolved_head_dim
+    angles = attn.rope_frequencies(Dh, S, cfg.rope_theta)
+    x = embedding(params["embed"], tokens)
+
+    def attend(lp, x):
+        h = rmsnorm(lp["attn_norm"], x)
+        q, k, v = attn.gqa_qkv(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads)
+        q = attn.apply_rope(q, angles)
+        k = attn.apply_rope(k, angles)
+        o = attn.sdpa(q, k, v, causal=True, impl="xla")
+        return x + linear(lp["attn"]["wo"], o.reshape(B, S, -1)), k, v
+
+    k_list, v_list = [], []
+    for lp in params["dense_layers"]:
+        x, k, v = attend(lp, x)
+        x = x + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x))
+        k_list.append(k)
+        v_list.append(v)
+
+    from repro.models import moe as moe_mod
+
+    def body(carry, lp):
+        x = carry
+        x, k, v = attend(lp, x)
+        y, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["mlp_norm"], x), cfg)
+        return x + y, (k, v)
+
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    ) if cfg.remat else body
+    x, (moe_k, moe_v) = jax.lax.scan(body_fn, x, params["moe_layers"],
+                                     unroll=scan_unroll())
+
+    x = rmsnorm(params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    logits = linear(params["lm_head"], x)
+
+    if cfg.first_dense_layers:
+        ks = jnp.concatenate([jnp.stack(k_list, axis=0), moe_k], axis=0)
+        vs = jnp.concatenate([jnp.stack(v_list, axis=0), moe_v], axis=0)
+    else:
+        ks, vs = moe_k, moe_v
+    pad = max_seq - S
+    k_cache = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(
+        jnp.bfloat16)
+    v_cache = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(
+        jnp.bfloat16)
+    return logits, GQACache(k_cache, v_cache, jnp.asarray(S, jnp.int32))
+
+
+def moe_gqa_decode_step(params: Params, cfg: LMConfig, token: jnp.ndarray,
+                        cache: GQACache):
+    """MoE-GQA decode (kimi). token [B,1] -> (logits, cache')."""
+    B = token.shape[0]
+    x = embedding(params["embed"], token)
+    length = cache.length
+    S_max = cache.k.shape[2]
+    Dh = cfg.resolved_head_dim
+    pos_angles = attn.rope_frequencies(Dh, S_max, cfg.rope_theta)
+    angles_pos = jax.lax.dynamic_slice_in_dim(pos_angles, length, 1, axis=0)
+    n_dense = cfg.first_dense_layers
+
+    def attend_decode(lp, x, kc, vc):
+        h = rmsnorm(lp["attn_norm"], x)
+        q = linear(lp["attn"]["wq"], h).reshape(B, 1, cfg.n_heads, Dh)
+        k = linear(lp["attn"]["wk"], h).reshape(B, 1, cfg.n_kv_heads, Dh)
+        v = linear(lp["attn"]["wv"], h).reshape(B, 1, cfg.n_kv_heads, Dh)
+        q = attn.apply_rope(q, angles_pos)
+        k = attn.apply_rope(k, angles_pos)
+        kc = jax.lax.dynamic_update_slice(
+            kc, k.astype(kc.dtype), (0, length, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v.astype(vc.dtype), (0, length, 0, 0))
+        o = _decode_attend(q, kc, vc, length, 1.0 / math.sqrt(Dh))
+        return x + linear(lp["attn"]["wo"], o.reshape(B, 1, -1)), kc, vc
+
+    k_cache, v_cache = cache.k, cache.v
+    for i, lp in enumerate(params["dense_layers"]):
+        x, kc, vc = attend_decode(lp, x, k_cache[i], v_cache[i])
+        k_cache = k_cache.at[i].set(kc)
+        v_cache = v_cache.at[i].set(vc)
+        x = x + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x))
+
+    def body(carry, layer_io):
+        x = carry
+        lp, kc, vc = layer_io
+        x, kc, vc = attend_decode(lp, x, kc, vc)
+        x = _moe_or_mlp(lp, x, cfg)
+        return x, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["moe_layers"], k_cache[n_dense:], v_cache[n_dense:]),
+        unroll=scan_unroll())
+    if n_dense:
+        k_cache = jnp.concatenate([k_cache[:n_dense], new_k], axis=0)
+        v_cache = jnp.concatenate([v_cache[:n_dense], new_v], axis=0)
+    else:
+        k_cache, v_cache = new_k, new_v
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = linear(params["lm_head"], x)
+    return logits, GQACache(k_cache, v_cache, length + 1)

@@ -1,0 +1,273 @@
+"""Foundational pure-JAX layers.
+
+Models in this framework are (params-pytree, pure function) pairs. Every layer
+here follows the convention::
+
+    params = layer_init(key, ...)     # returns a pytree of jnp arrays
+    y      = layer_apply(params, x)   # pure function
+
+This keeps sharding fully explicit (each leaf gets a PartitionSpec from
+``repro.distributed.sharding``) and avoids any framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of jnp arrays
+DTYPE = jnp.float32  # compute dtype default (bf16 selected per-config)
+
+# REPRO_FULL_UNROLL=1 fully unrolls every lax.scan. Production keeps scans
+# (small HLO, fast compiles, XLA overlaps per-layer collectives); the
+# roofline dry-run unrolls because XLA's cost_analysis counts a loop body
+# ONCE regardless of trip count (verified experimentally) — unrolled
+# programs give honest per-step FLOP/byte/collective totals.
+_FULL_UNROLL = bool(int(os.environ.get("REPRO_FULL_UNROLL", "0")))
+# §Perf knob: disable activation rematerialization (trades HBM residency
+# for a full recompute pass of bytes+flops)
+NO_REMAT = bool(int(os.environ.get("REPRO_NO_REMAT", "0")))
+
+
+def scan_unroll() -> bool | int:
+    """The `unroll=` argument every lax.scan in this codebase uses."""
+    return True if _FULL_UNROLL else 1
+
+
+# Beyond-paper §Perf optimization: pin activation shardings inside the
+# model so GSPMD keeps the batch axis sharded through attention (without
+# this it may all-gather the batch and shard heads only — measured 4.2x
+# per-device FLOP inflation on LM cells). Enabled by setting
+# REPRO_ACT_SHARDING to the comma-separated DP axis names ("data" or
+# "pod,data"); empty = paper-faithful baseline behavior (GSPMD decides).
+def act_dp_axes() -> tuple | None:
+    env = os.environ.get("REPRO_ACT_SHARDING", "")
+    if not env:
+        return None
+    return tuple(env.split(","))
+
+
+def constrain_act(x: jnp.ndarray, spec_tail: tuple) -> jnp.ndarray:
+    """with_sharding_constraint(batch=DP axes, then spec_tail) when the
+    REPRO_ACT_SHARDING knob is on and the dims divide; no-op otherwise."""
+    dp = act_dp_axes()
+    if dp is None:
+        return x
+    return constrain_spec(x, (dp,) + tuple(spec_tail))
+
+
+def constrain_spec(x: jnp.ndarray, spec: tuple) -> jnp.ndarray:
+    """Raw with_sharding_constraint guarded by the same knob ('data' in a
+    spec entry is replaced by the configured DP axes)."""
+    dp = act_dp_axes()
+    if dp is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = tuple(dp if s == "data" else s for s in spec)
+    if len(spec) != x.ndim:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:  # no ambient mesh (plain CPU tests) — no-op
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, std: float = 0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def lecun_normal(key, shape, fan_in: int | None = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = math.sqrt(1.0 / max(1, fan_in))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def he_normal(key, shape, fan_in: int | None = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = math.sqrt(2.0 / max(1, fan_in))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embeddings
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = True,
+                std: float | None = None, dtype=jnp.float32) -> Params:
+    kw, _ = jax.random.split(key)
+    w = (trunc_normal(kw, (d_in, d_out), std=std, dtype=dtype) if std is not None
+         else lecun_normal(kw, (d_in, d_out), dtype=dtype))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.float32) -> Params:
+    return {"table": trunc_normal(key, (vocab, dim), std=0.02, dtype=dtype)}
+
+
+def embedding(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype),
+            "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def modulated_layernorm(p: Params, x: jnp.ndarray, shift: jnp.ndarray,
+                        scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """adaLN: LayerNorm (no affine) then (1+scale)*x + shift — DiT-style."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + scale.astype(jnp.float32)) + shift.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool = False,
+             bias: bool = True, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": linear_init(k1, d_model, d_ff, bias=bias, dtype=dtype),
+         "down": linear_init(k2, d_ff, d_model, bias=bias, dtype=dtype)}
+    if gated:
+        p["gate"] = linear_init(k3, d_model, d_ff, bias=bias, dtype=dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, *, act: str = "gelu") -> jnp.ndarray:
+    h = linear(p["up"], x)
+    if "gate" in p:  # SwiGLU-style
+        g = linear(p["gate"], x)
+        h = jax.nn.silu(g) * h
+    else:
+        h = _ACT[act](h)
+    return linear(p["down"], h)
+
+
+_ACT: dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+# ---------------------------------------------------------------------------
+# Conv (patch embed / detector necks). NHWC layout (TPU-native).
+# ---------------------------------------------------------------------------
+
+def conv_init(key, k_h: int, k_w: int, c_in: int, c_out: int, *,
+              bias: bool = True, dtype=jnp.float32) -> Params:
+    kw, _ = jax.random.split(key)
+    fan_in = k_h * k_w * c_in
+    p = {"w": he_normal(kw, (k_h, k_w, c_in, c_out), fan_in=fan_in, dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype=dtype)
+    return p
+
+
+def conv2d(p: Params, x: jnp.ndarray, *, stride: int = 1,
+           padding: str = "SAME") -> jnp.ndarray:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer utilities (scan-over-layers)
+# ---------------------------------------------------------------------------
+
+def stack_init(key, n_layers: int, init_fn: Callable[[jax.Array], Params]) -> Params:
+    """Initialize n_layers copies of a layer and stack leaves on axis 0.
+
+    The result feeds ``jax.lax.scan`` — one compiled layer body regardless of
+    depth, which keeps HLO small and lets XLA overlap per-layer collectives.
+    """
+    keys = jax.random.split(key, n_layers)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+
+
+def scan_layers(body: Callable, stacked: Params, x, *, extra=None,
+                remat: bool = False, remat_policy: str | None = None):
+    """Run ``body(layer_params, carry, extra) -> carry`` over stacked layers."""
+    fn = body
+    if remat and NO_REMAT:
+        remat = False
+    if remat:
+        policy = None
+        if remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots
+        elif remat_policy == "dots_no_batch":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        fn = jax.checkpoint(body, policy=policy)
+
+    def step(carry, layer_params):
+        return fn(layer_params, carry, extra), None
+
+    y, _ = jax.lax.scan(step, x, stacked, unroll=scan_unroll())
+    return y
+
+
+def count_params(params: Params) -> int:
+    return int(sum(p.size for p in jax.tree.leaves(params)))
+
+
+def param_bytes(params: Params) -> int:
+    return int(sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params)))
+
+
+def cast_floats(params: Params, dtype) -> Params:
+    def c(p):
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            return p.astype(dtype)
+        return p
+    return jax.tree.map(c, params)

@@ -1,0 +1,153 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based static dispatch.
+
+The dispatch is the GShard/MaxText-style static-shaped formulation adapted for
+expert parallelism on TPU meshes:
+
+  1. router logits [T, E] -> top-k gates (softmax over chosen experts)
+  2. position-in-expert via cumulative-sum of one-hot assignments, with a
+     fixed per-expert capacity C (overflow tokens are dropped — capacity
+     factor defaults to 1.25 like GShard)
+  3. scatter tokens into a dense [E, C, D] buffer (expert axis shardable over
+     the 'model'/'expert' mesh axis -> GSPMD inserts the all-to-all)
+  4. grouped expert FFN via einsum over the leading E axis (MXU-friendly)
+  5. gather back and combine with gates
+
+A shared-expert branch (DeepSeek/Kimi style) runs densely over all tokens.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.layers import Params, linear_init, trunc_normal
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jnp.ndarray        # load-balancing loss (Switch-style)
+    dropped_frac: jnp.ndarray    # fraction of (token, k) assignments dropped
+
+
+def moe_init(key, cfg: LMConfig) -> Params:
+    E = cfg.moe_experts
+    dff = cfg.moe_d_ff
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": trunc_normal(kr, (cfg.d_model, E), std=0.02,
+                                     dtype=jnp.float32)},
+        # stacked expert weights: [E, d_model, dff] / [E, dff, d_model]
+        "w_gate": trunc_normal(kg, (E, cfg.d_model, dff), std=0.02,
+                               dtype=cfg.dtype),
+        "w_up": trunc_normal(ku, (E, cfg.d_model, dff), std=0.02,
+                             dtype=cfg.dtype),
+        "w_down": trunc_normal(kd, (E, dff, cfg.d_model), std=0.02,
+                               dtype=cfg.dtype),
+    }
+    if cfg.moe_shared_experts > 0:
+        sdff = dff * cfg.moe_shared_experts
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "gate": linear_init(k1, cfg.d_model, sdff, bias=False, dtype=cfg.dtype),
+            "up": linear_init(k2, cfg.d_model, sdff, bias=False, dtype=cfg.dtype),
+            "down": linear_init(k3, sdff, cfg.d_model, bias=False, dtype=cfg.dtype),
+        }
+    return p
+
+
+def router_topk(router_w: jnp.ndarray, x: jnp.ndarray, top_k: int):
+    """x [T, D] -> (gates [T, k], ids [T, k], probs [T, E])."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, ids, probs
+
+
+def _positions_in_runs(sorted_keys: jnp.ndarray) -> jnp.ndarray:
+    """For a sorted int array, the rank of each element within its run of
+    equal values. O(n) memory — replaces the O(T*K x E) one-hot cumsum
+    that is catastrophic at megatoken scale."""
+    n = sorted_keys.shape[0]
+    idx = jnp.arange(n)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]])
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0))
+    return idx - seg_start
+
+
+import os
+
+_CF_ENV = os.environ.get("REPRO_MOE_CF", "")
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, cfg: LMConfig, *,
+            capacity_factor: float = 1.25):
+    """x [B, S, D] -> (y [B, S, D], MoEMetrics).
+
+    Sort-based token dispatch (MaxText-style): assignments are sorted by
+    expert id, positions-within-expert come from run ranks, and tokens
+    scatter into a dense [E, C, D] buffer whose expert axis shards over
+    the `model` mesh axis (GSPMD inserts the all-to-all). All
+    intermediates are O(T*K) or O(E*C*D) — no [T, E] materialization.
+    """
+    if _CF_ENV:  # §Perf knob: REPRO_MOE_CF overrides the capacity factor
+        capacity_factor = float(_CF_ENV)
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    gates, ids, probs = router_topk(p["router"]["w"], xt, K)
+
+    # Capacity per expert (static): ceil(T * K / E * cf), multiple of 8.
+    C = int(max(8, -(-int(T * K * capacity_factor) // E)))
+    C = min(C + (-C) % 8, max(T, 8))
+
+    e_flat = ids.reshape(T * K)
+    g_flat = gates.reshape(T * K).astype(x.dtype)
+
+    order = jnp.argsort(e_flat)                        # stable
+    sorted_e = e_flat[order]
+    pos_in_e = _positions_in_runs(sorted_e)
+    keep = pos_in_e < C
+    dropped_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    tok = order // K                                   # token of each slot
+    safe_e = jnp.where(keep, sorted_e, 0)
+    safe_pos = jnp.where(keep, pos_in_e, 0)
+    # NOTE (§Perf, refuted hypothesis): forcing dp sharding on the
+    # permutation-ordered dispatch arrays here inserts all-to-all reshards
+    # that cost 5x more than GSPMD's own strategy — measured and reverted
+    # (EXPERIMENTS.md §Perf, deepseek train_4k iteration 2).
+    vals = xt[tok] * keep[:, None].astype(x.dtype)     # [T*K, D]
+    buf = jnp.zeros((E, C, D), dtype=x.dtype)
+    buf = buf.at[safe_e, safe_pos].add(vals)           # dropped rows add 0s
+
+    # Grouped expert FFN (SwiGLU)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    # Gather back, gate-combine, unsort
+    y_sorted = y_buf[safe_e, safe_pos] * keep[:, None].astype(x.dtype)
+    y_sorted = y_sorted * g_flat[order][:, None]
+    y_flat = jnp.zeros((T * K, D), x.dtype).at[order].set(y_sorted)
+    y = jnp.sum(y_flat.reshape(T, K, D), axis=1)
+
+    # Shared-expert branch
+    if "shared" in p:
+        sh = p["shared"]
+        hg = jax.nn.silu(xt @ sh["gate"]["w"].astype(x.dtype))
+        hu = xt @ sh["up"]["w"].astype(x.dtype)
+        y = y + (hg * hu) @ sh["down"]["w"].astype(x.dtype)
+
+    # Switch-style load-balancing aux loss
+    me = jnp.mean(probs, axis=0)                               # [E]
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    return y.reshape(B, S, D), MoEMetrics(aux, dropped_frac)

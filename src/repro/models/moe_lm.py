@@ -1,0 +1,133 @@
+"""MoE decoder LM (DeepSeek-V3 / Kimi-K2 style).
+
+Layer stack = `first_dense_layers` dense blocks (unstacked) followed by a
+scan over homogeneous MoE blocks. Attention is MLA (deepseek) or GQA (kimi).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import attention as attn
+from repro.models import moe
+from repro.models.layers import (
+    Params,
+    embedding,
+    embedding_init,
+    linear,
+    linear_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    stack_init,
+)
+
+
+def _attn_init(key, cfg: LMConfig) -> Params:
+    if cfg.mla:
+        return attn.mla_init(key, cfg.d_model, cfg.n_heads,
+                             q_lora_rank=cfg.q_lora_rank,
+                             kv_lora_rank=cfg.kv_lora_rank,
+                             qk_nope_dim=cfg.qk_nope_dim,
+                             qk_rope_dim=cfg.qk_rope_dim,
+                             v_head_dim=cfg.v_head_dim, dtype=cfg.dtype)
+    return attn.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.resolved_head_dim, dtype=cfg.dtype)
+
+
+def _attn_apply(p: Params, x, cfg: LMConfig, angles, impl: str):
+    if cfg.mla:
+        return attn.mla_attention(p, x, n_heads=cfg.n_heads,
+                                  qk_nope_dim=cfg.qk_nope_dim,
+                                  qk_rope_dim=cfg.qk_rope_dim,
+                                  v_head_dim=cfg.v_head_dim,
+                                  kv_lora_rank=cfg.kv_lora_rank,
+                                  angles=angles, causal=True, impl=impl)
+    return attn.gqa_attention(p, x, n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_kv_heads, angles=angles,
+                              causal=True, impl=impl)
+
+
+def dense_block_init(key, cfg: LMConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": rmsnorm_init(cfg.d_model, dtype=cfg.dtype),
+        "attn": _attn_init(k1, cfg),
+        "mlp_norm": rmsnorm_init(cfg.d_model, dtype=cfg.dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, gated=True, bias=False,
+                        dtype=cfg.dtype),
+    }
+
+
+def moe_block_init(key, cfg: LMConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": rmsnorm_init(cfg.d_model, dtype=cfg.dtype),
+        "attn": _attn_init(k1, cfg),
+        "mlp_norm": rmsnorm_init(cfg.d_model, dtype=cfg.dtype),
+        "moe": moe.moe_init(k2, cfg),
+    }
+
+
+def moe_lm_init(key, cfg: LMConfig) -> Params:
+    ke, kd, km, ko = jax.random.split(key, 4)
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    dense_keys = jax.random.split(kd, max(1, cfg.first_dense_layers))
+    return {
+        "embed": embedding_init(ke, cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "dense_layers": [dense_block_init(k, cfg)
+                         for k in dense_keys[: cfg.first_dense_layers]],
+        "moe_layers": stack_init(km, n_moe, lambda k: moe_block_init(k, cfg)),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype=cfg.dtype),
+        "lm_head": linear_init(ko, cfg.d_model, cfg.vocab, bias=False,
+                               dtype=cfg.dtype),
+    }
+
+
+def moe_lm_forward(params: Params, cfg: LMConfig, tokens: jnp.ndarray, *,
+                   impl: str = "xla", capacity_factor: float = 1.25):
+    """tokens [B,S] -> (logits [B,S,V], aux_loss)."""
+    S = tokens.shape[1]
+    rope_dim = cfg.qk_rope_dim if cfg.mla else cfg.resolved_head_dim
+    angles = attn.rope_frequencies(rope_dim, S, cfg.rope_theta)
+    x = embedding(params["embed"], tokens)
+
+    for lp in params["dense_layers"]:
+        h = _attn_apply(lp["attn"], rmsnorm(lp["attn_norm"], x), cfg, angles, impl)
+        x = x + h
+        x = x + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x))
+
+    def body(lp, carry, extra):
+        x, aux = carry
+        h = _attn_apply(lp["attn"], rmsnorm(lp["attn_norm"], x), cfg, extra, impl)
+        x = x + h
+        y, metrics = moe.moe_ffn(lp["moe"], rmsnorm(lp["mlp_norm"], x), cfg,
+                                 capacity_factor=capacity_factor)
+        return (x + y, aux + metrics.aux_loss)
+
+    from repro.models.layers import NO_REMAT
+    body_fn = body
+    if cfg.remat and not NO_REMAT:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def step(carry, lp):
+        return body_fn(lp, carry, angles), None
+
+    from repro.models.layers import scan_unroll
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                               params["moe_layers"], unroll=scan_unroll())
+    x = rmsnorm(params["final_norm"], x)
+    logits = linear(params["lm_head"], x)
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    return logits, aux / max(1, n_moe)
+
+
+def moe_lm_loss(params: Params, cfg: LMConfig, tokens, labels, *,
+                aux_weight: float = 0.001):
+    logits, aux = moe_lm_forward(params, cfg, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).squeeze(-1)
+    return jnp.mean(nll) + aux_weight * aux

@@ -1,0 +1,166 @@
+"""Swin Transformer (Swin-B) — windowed + shifted-window attention,
+patch merging between stages. Pure JAX; stages are Python loops (hetero
+dims), blocks within a stage run under scan where the stage is deep.
+
+Layout: NHWC feature maps between stages; windows flattened for attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import VisionConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    Params,
+    conv2d,
+    conv_init,
+    layernorm,
+    layernorm_init,
+    linear,
+    linear_init,
+    mlp,
+    mlp_init,
+    trunc_normal,
+)
+
+
+def _rel_position_index(window: int) -> np.ndarray:
+    """[w^2, w^2] index into the (2w-1)^2 relative-bias table."""
+    coords = np.stack(np.meshgrid(np.arange(window), np.arange(window),
+                                  indexing="ij"))  # [2, w, w]
+    flat = coords.reshape(2, -1)                    # [2, w^2]
+    rel = flat[:, :, None] - flat[:, None, :]       # [2, w^2, w^2]
+    rel = rel.transpose(1, 2, 0) + (window - 1)
+    return rel[..., 0] * (2 * window - 1) + rel[..., 1]
+
+
+MAX_WINDOW = 12  # rel-bias tables sized for the largest window (384-res)
+
+
+def _effective_window(map_size: int, preferred: int) -> int:
+    """Largest window <= MAX_WINDOW that divides the feature map (Swin-384
+    uses window 12 where 7 does not divide the 96x96 stage-1 map)."""
+    if map_size % preferred == 0:
+        return preferred
+    for w in range(min(MAX_WINDOW, map_size), 0, -1):
+        if map_size % w == 0:
+            return w
+    return 1
+
+
+def swin_block_init(key, dim: int, n_heads: int, window: int,
+                    mlp_ratio: float = 4.0, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_bias = (2 * max(window, MAX_WINDOW) - 1) ** 2
+    return {
+        "norm1": layernorm_init(dim, dtype=dtype),
+        "attn": {
+            "wq": linear_init(jax.random.fold_in(k1, 0), dim, dim, dtype=dtype),
+            "wk": linear_init(jax.random.fold_in(k1, 1), dim, dim, dtype=dtype),
+            "wv": linear_init(jax.random.fold_in(k1, 2), dim, dim, dtype=dtype),
+            "wo": linear_init(jax.random.fold_in(k1, 3), dim, dim, dtype=dtype),
+        },
+        "rel_bias": trunc_normal(k3, (n_bias, n_heads), dtype=dtype),
+        "norm2": layernorm_init(dim, dtype=dtype),
+        "mlp": mlp_init(k2, dim, int(dim * mlp_ratio), dtype=dtype),
+    }
+
+
+def swin_block(p: Params, x: jnp.ndarray, *, n_heads: int, window: int,
+               shift: int, rel_index: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, H, W, C]."""
+    B, H, W, C = x.shape
+    shortcut = x
+    x = layernorm(p["norm1"], x)
+    if shift > 0:
+        x = jnp.roll(x, (-shift, -shift), axis=(1, 2))
+    wins = attn.window_partition(x, window)         # [B*nW, w^2, C]
+
+    T = window * window
+    rel_bias = p["rel_bias"][rel_index.reshape(-1)].reshape(T, T, -1)
+    rel_bias = rel_bias.transpose(2, 0, 1)          # [heads, T, T]
+    mask = (attn.shifted_window_mask(H, W, window, shift)
+            if shift > 0 else None)
+    wins = attn.window_attention(p["attn"], wins, n_heads=n_heads,
+                                 rel_bias=rel_bias, mask=mask)
+    x = attn.window_unpartition(wins, window, H, W)
+    if shift > 0:
+        x = jnp.roll(x, (shift, shift), axis=(1, 2))
+    x = shortcut + x
+    x = x + mlp(p["mlp"], layernorm(p["norm2"], x))
+    return x
+
+
+def patch_merge_init(key, dim: int, dtype=jnp.float32) -> Params:
+    return {
+        "norm": layernorm_init(4 * dim, dtype=dtype),
+        "reduce": linear_init(key, 4 * dim, 2 * dim, bias=False, dtype=dtype),
+    }
+
+
+def patch_merge(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """[B, H, W, C] -> [B, H/2, W/2, 2C]."""
+    B, H, W, C = x.shape
+    x = x.reshape(B, H // 2, 2, W // 2, 2, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, H // 2, W // 2, 4 * C)
+    return linear(p["reduce"], layernorm(p["norm"], x))
+
+
+def swin_init(key, cfg: VisionConfig) -> Params:
+    assert cfg.swin
+    depths, dims = cfg.depths, cfg.dims
+    keys = jax.random.split(key, len(depths) + 3)
+    heads = [max(1, d // 32) for d in dims]
+    stages = []
+    for s, (depth, dim) in enumerate(zip(depths, dims)):
+        bkeys = jax.random.split(keys[s], depth)
+        blocks = [swin_block_init(bk, dim, heads[s], cfg.window,
+                                  dtype=cfg.dtype) for bk in bkeys]
+        stage = {"blocks": blocks}
+        if s < len(depths) - 1:
+            stage["merge"] = patch_merge_init(
+                jax.random.fold_in(keys[s], 999), dim, dtype=cfg.dtype)
+        stages.append(stage)
+    return {
+        "patch_embed": conv_init(keys[-3], cfg.patch, cfg.patch, 3, dims[0],
+                                 dtype=cfg.dtype),
+        "patch_norm": layernorm_init(dims[0], dtype=cfg.dtype),
+        "stages": stages,
+        "final_norm": layernorm_init(dims[-1], dtype=cfg.dtype),
+        "head": linear_init(keys[-1], dims[-1], cfg.n_classes, dtype=cfg.dtype),
+    }
+
+
+def swin_forward(params: Params, cfg: VisionConfig,
+                 images: jnp.ndarray) -> jnp.ndarray:
+    """images [B,H,W,3] -> logits [B, n_classes]."""
+    depths, dims = cfg.depths, cfg.dims
+    heads = [max(1, d // 32) for d in dims]
+    w = cfg.window
+
+    x = conv2d(params["patch_embed"], images.astype(cfg.dtype),
+               stride=cfg.patch, padding="VALID")
+    x = layernorm(params["patch_norm"], x)
+
+    for s, stage in enumerate(params["stages"]):
+        for b, bp in enumerate(stage["blocks"]):
+            eff_w = _effective_window(x.shape[1], w)
+            shift = 0 if (b % 2 == 0 or x.shape[1] <= eff_w) else eff_w // 2
+            rel_index = jnp.asarray(_rel_position_index(eff_w))
+            x = swin_block(bp, x, n_heads=heads[s], window=eff_w,
+                           shift=shift, rel_index=rel_index)
+        if "merge" in stage:
+            x = patch_merge(stage["merge"], x)
+
+    x = layernorm(params["final_norm"], x)
+    x = jnp.mean(x, axis=(1, 2))                    # global average pool
+    return linear(params["head"], x)
+
+
+def swin_loss(params: Params, cfg: VisionConfig, images, labels):
+    logits = swin_forward(params, cfg, images).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)
+    return jnp.mean(nll)

@@ -1,0 +1,85 @@
+"""Dense decoder-only LM (StableLM family) — pure JAX, scan-over-layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    Params,
+    embedding,
+    embedding_init,
+    linear,
+    linear_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    scan_layers,
+    stack_init,
+)
+
+
+def dense_block_init(key, cfg: LMConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": rmsnorm_init(cfg.d_model, dtype=cfg.dtype),
+        "attn": attn.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.resolved_head_dim, dtype=cfg.dtype),
+        "mlp_norm": rmsnorm_init(cfg.d_model, dtype=cfg.dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, gated=True, bias=False,
+                        dtype=cfg.dtype),
+    }
+
+
+def dense_block(p: Params, x: jnp.ndarray, cfg: LMConfig,
+                angles: jnp.ndarray, impl: str) -> jnp.ndarray:
+    h = attn.gqa_attention(p["attn"], rmsnorm(p["attn_norm"], x),
+                           n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                           angles=angles, causal=True, impl=impl)
+    x = x + h
+    x = x + mlp(p["mlp"], rmsnorm(p["mlp_norm"], x))
+    return x
+
+
+def lm_init(key, cfg: LMConfig) -> Params:
+    ke, kl, ko = jax.random.split(key, 3)
+    params = {
+        "embed": embedding_init(ke, cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "layers": stack_init(kl, cfg.n_layers,
+                             lambda k: dense_block_init(k, cfg)),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype=cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(ko, cfg.d_model, cfg.vocab, bias=False,
+                                        dtype=cfg.dtype)
+    return params
+
+
+def lm_forward(params: Params, cfg: LMConfig, tokens: jnp.ndarray, *,
+               impl: str = "xla") -> jnp.ndarray:
+    """tokens [B, S] -> logits [B, S, V]."""
+    S = tokens.shape[1]
+    x = embedding(params["embed"], tokens)
+    angles = attn.rope_frequencies(cfg.resolved_head_dim, S, cfg.rope_theta)
+
+    def body(layer_p, carry, extra):
+        return dense_block(layer_p, carry, cfg, extra, "xla")
+
+    x = scan_layers(body, params["layers"], x, extra=angles,
+                    remat=cfg.remat, remat_policy="dots_no_batch")
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(x.dtype)
+    else:
+        logits = linear(params["lm_head"], x)
+    return logits
+
+
+def lm_loss(params: Params, cfg: LMConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray) -> jnp.ndarray:
+    logits = lm_forward(params, cfg, tokens).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).squeeze(-1)
+    return jnp.mean(nll)

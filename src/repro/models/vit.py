@@ -1,0 +1,125 @@
+"""ViT (S/16, B/16, H/14) — pure JAX, scan-over-layers.
+
+Patch-embed is part of the model (vision pool semantics). Classification uses
+a CLS token + linear head; `vit_features` exposes the patch-token feature map
+for the detector neck (repro.models.detector).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VisionConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    Params,
+    conv2d,
+    conv_init,
+    layernorm,
+    layernorm_init,
+    linear,
+    linear_init,
+    mlp,
+    mlp_init,
+    scan_layers,
+    stack_init,
+    trunc_normal,
+)
+
+
+def vit_block_init(key, cfg: VisionConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype=cfg.dtype),
+        "attn": attn.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                              bias=True, dtype=cfg.dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype=cfg.dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, gated=False, bias=True,
+                        dtype=cfg.dtype),
+    }
+
+
+def vit_block(p: Params, x: jnp.ndarray, cfg: VisionConfig,
+              impl: str = "xla") -> jnp.ndarray:
+    h = attn.gqa_attention(p["attn"], layernorm(p["norm1"], x),
+                           n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+                           angles=None, causal=False, impl=impl)
+    x = x + h
+    x = x + mlp(p["mlp"], layernorm(p["norm2"], x))
+    return x
+
+
+def vit_init(key, cfg: VisionConfig, *, img_res: int | None = None) -> Params:
+    img_res = img_res or cfg.img_res
+    n_patches = (img_res // cfg.patch) ** 2
+    kp, kc, kl, kh, kq = jax.random.split(key, 5)
+    return {
+        "patch_embed": conv_init(kp, cfg.patch, cfg.patch, 3, cfg.d_model,
+                                 dtype=cfg.dtype),
+        "cls_token": trunc_normal(kc, (1, 1, cfg.d_model), dtype=cfg.dtype),
+        "pos_embed": trunc_normal(kq, (1, n_patches + 1, cfg.d_model),
+                                  dtype=cfg.dtype),
+        "layers": stack_init(kl, cfg.n_layers, lambda k: vit_block_init(k, cfg)),
+        "final_norm": layernorm_init(cfg.d_model, dtype=cfg.dtype),
+        "head": linear_init(kh, cfg.d_model, cfg.n_classes, dtype=cfg.dtype),
+    }
+
+
+def _interp_pos_embed(pos: jnp.ndarray, n_patches: int) -> jnp.ndarray:
+    """Bilinear-resize the grid part of pos_embed to a new patch count."""
+    n_old = pos.shape[1] - 1
+    if n_old == n_patches:
+        return pos
+    cls, grid = pos[:, :1], pos[:, 1:]
+    g_old = int(round(n_old ** 0.5))
+    g_new = int(round(n_patches ** 0.5))
+    grid = grid.reshape(1, g_old, g_old, -1)
+    grid = jax.image.resize(grid, (1, g_new, g_new, grid.shape[-1]), "bilinear")
+    return jnp.concatenate([cls, grid.reshape(1, g_new * g_new, -1)], axis=1)
+
+
+def vit_encode(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
+               impl: str = "xla") -> jnp.ndarray:
+    """images [B,H,W,3] -> tokens [B, 1+P, D] (CLS first)."""
+    B = images.shape[0]
+    x = conv2d(params["patch_embed"], images.astype(cfg.dtype),
+               stride=cfg.patch, padding="VALID")           # [B, h, w, D]
+    x = x.reshape(B, -1, cfg.d_model)
+    cls = jnp.broadcast_to(params["cls_token"].astype(x.dtype),
+                           (B, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + _interp_pos_embed(params["pos_embed"], x.shape[1] - 1).astype(x.dtype)
+
+    def body(lp, carry, extra):
+        return vit_block(lp, carry, cfg, impl)
+
+    x = scan_layers(body, params["layers"], x, remat=cfg.remat,
+                    remat_policy="dots_no_batch")
+    return layernorm(params["final_norm"], x)
+
+
+def vit_forward(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
+                impl: str = "xla") -> jnp.ndarray:
+    """images [B,H,W,3] -> class logits [B, n_classes]."""
+    tokens = vit_encode(params, cfg, images, impl=impl)
+    return linear(params["head"], tokens[:, 0])
+
+
+def vit_features(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
+                 impl: str = "xla") -> jnp.ndarray:
+    """images [B,H,W,3] -> patch feature map [B, h, w, D] (no CLS)."""
+    B, H = images.shape[0], images.shape[1]
+    g = H // cfg.patch
+    tokens = vit_encode(params, cfg, images, impl=impl)
+    return tokens[:, 1:].reshape(B, g, g, cfg.d_model)
+
+
+def vit_loss(params: Params, cfg: VisionConfig, images: jnp.ndarray,
+             labels: jnp.ndarray, *, label_smoothing: float = 0.0):
+    logits = vit_forward(params, cfg, images).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    n = cfg.n_classes
+    onehot = jax.nn.one_hot(labels, n)
+    if label_smoothing > 0:
+        onehot = onehot * (1 - label_smoothing) + label_smoothing / n
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))

@@ -1,0 +1,42 @@
+"""Network simulation: fixed-capacity links + synthetic mobile traces.
+
+Mirrors the paper's Mahimahi setup ({24-60 Mbps, 5-20 ms} fixed links and
+real-world mobile traces). The pipeline asks for per-timestep capacity and
+charges transfer time = RTT + bytes/rate; MadEye's NetworkEstimator sees
+the *observed* rates (harmonic mean window), never the trace itself.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class NetworkTrace:
+    mbps: np.ndarray        # [T] capacity per timestep
+    rtt_s: float = 0.02
+
+    @classmethod
+    def fixed(cls, mbps: float, rtt_ms: float, T: int) -> "NetworkTrace":
+        return cls(np.full(T, float(mbps)), rtt_ms / 1e3)
+
+    @classmethod
+    def mobile(cls, T: int, base_mbps: float = 24.0, rtt_ms: float = 20.0,
+               seed: int = 0) -> "NetworkTrace":
+        """LTE-ish trace: AR(1) around base with occasional deep fades."""
+        rng = np.random.default_rng(seed)
+        x = np.zeros(T)
+        x[0] = base_mbps
+        for t in range(1, T):
+            x[t] = 0.9 * x[t - 1] + 0.1 * base_mbps + rng.normal(0, 3.0)
+            if rng.random() < 0.01:
+                x[t] *= 0.3          # fade
+        return cls(np.clip(x, 1.0, base_mbps * 2), rtt_ms / 1e3)
+
+    def transfer_time(self, t: int, n_bytes: int) -> float:
+        rate = self.mbps[min(t, len(self.mbps) - 1)]
+        return self.rtt_s + n_bytes * 8 / (rate * 1e6)
+
+    def observed_mbps(self, t: int) -> float:
+        return float(self.mbps[min(t, len(self.mbps) - 1)])

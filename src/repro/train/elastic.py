@@ -1,0 +1,48 @@
+"""Elastic re-sharding: resume a checkpoint on a different mesh.
+
+When nodes die (or capacity grows), the job restarts with a different
+device count. Checkpoints store *global* arrays (or per-host shards of
+them); `reshard` re-lays a pytree out for a new mesh by building new
+global arrays from the old values with the new sharding. All data movement
+is delegated to jax.device_put with the target sharding — GSPMD emits the
+minimal collective/DMA schedule.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard(tree, shardings_tree):
+    """device_put every leaf onto its new NamedSharding."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings_tree)
+
+
+def shrink_mesh(mesh: Mesh, failed_axis: str, keep: int) -> Mesh:
+    """Rebuild a mesh with `keep` slots along one axis (node loss)."""
+    axis_idx = mesh.axis_names.index(failed_axis)
+    shape = list(mesh.devices.shape)
+    if keep >= shape[axis_idx]:
+        return mesh
+    index = [slice(None)] * len(shape)
+    index[axis_idx] = slice(0, keep)
+    return Mesh(mesh.devices[tuple(index)], mesh.axis_names)
+
+
+def valid_submesh_sizes(n_devices: int, model_parallel: int) -> list[int]:
+    """Data-parallel widths that evenly use the surviving devices."""
+    out = []
+    for dp in range(1, n_devices // model_parallel + 1):
+        if dp * model_parallel <= n_devices:
+            out.append(dp)
+    return out
+
+
+def rebalance_batch(global_batch: int, old_dp: int, new_dp: int) -> int:
+    """Keep per-replica batch constant when the DP width changes; the
+    caller rescales accumulation steps to preserve the optimizer's
+    effective batch."""
+    per_replica = global_batch // old_dp
+    return per_replica * new_dp

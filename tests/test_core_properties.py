@@ -1,0 +1,187 @@
+"""Hypothesis property tests on MadEye's core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import search
+from repro.core.grid import (
+    DEFAULT_GRID,
+    OrientationGrid,
+    contiguous,
+    removal_keeps_contiguity,
+)
+from repro.core.path import planner_for, prim_mst
+
+GRID = DEFAULT_GRID
+N = GRID.n_cells
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+@st.composite
+def contiguous_masks(draw, grid=GRID, max_size=10):
+    """Random contiguous shapes grown from a seed cell."""
+    size = draw(st.integers(1, max_size))
+    start = draw(st.integers(0, grid.n_cells - 1))
+    mask = np.zeros(grid.n_cells, bool)
+    mask[start] = True
+    for _ in range(size - 1):
+        frontier = np.flatnonzero(
+            ~mask & (grid.neighbor_mask[mask].any(0)))
+        if frontier.size == 0:
+            break
+        mask[draw(st.sampled_from(list(map(int, frontier))))] = True
+    return mask
+
+
+labels_arrays = st.lists(
+    st.floats(0.001, 1.0), min_size=N, max_size=N).map(np.asarray)
+
+
+# ---------------------------------------------------------------------------
+# grid / contiguity
+# ---------------------------------------------------------------------------
+
+@given(contiguous_masks())
+@settings(max_examples=30, deadline=None)
+def test_generated_masks_are_contiguous(mask):
+    assert contiguous(mask, GRID)
+
+
+@given(contiguous_masks(), st.integers(0, N - 1))
+@settings(max_examples=30, deadline=None)
+def test_removal_check_is_sound(mask, cell):
+    """If removal_keeps_contiguity says yes, the result IS contiguous."""
+    if not mask[cell]:
+        return
+    if removal_keeps_contiguity(mask, cell, GRID):
+        m = mask.copy()
+        m[cell] = False
+        assert contiguous(m, GRID)
+
+
+def test_grid_geometry():
+    assert GRID.n_cells == 25 and GRID.n_orientations == 75
+    d = GRID.angular_distance
+    assert np.allclose(d, d.T) and np.all(np.diag(d) == 0)
+    # triangle inequality (required by the TSP 2-approx)
+    for i in range(N):
+        for j in range(N):
+            for k in range(0, N, 7):
+                assert d[i, j] <= d[i, k] + d[k, j] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# search invariants
+# ---------------------------------------------------------------------------
+
+@given(contiguous_masks(), labels_arrays)
+@settings(max_examples=30, deadline=None)
+def test_evolve_preserves_contiguity_and_size(mask, labels):
+    centroids = GRID.centers.copy()
+    has_boxes = np.ones(N, bool)
+    out = search.evolve_shape(GRID, mask, labels, centroids, has_boxes)
+    assert contiguous(out, GRID)
+    assert out.sum() == mask.sum()          # evolve swaps, never resizes
+
+
+@given(contiguous_masks(), labels_arrays, st.integers(1, 12))
+@settings(max_examples=30, deadline=None)
+def test_resize_hits_target_and_stays_contiguous(mask, labels, target):
+    centroids = GRID.centers.copy()
+    has_boxes = np.zeros(N, bool)
+    out = search.resize_shape(GRID, mask, labels, centroids, has_boxes,
+                              target)
+    assert contiguous(out, GRID)
+    assert out.sum() == target
+
+
+@given(st.integers(1, 25), st.integers(0, N - 1))
+@settings(max_examples=30, deadline=None)
+def test_seed_shape_contiguous_and_bounded(size, center):
+    mask = search.seed_shape(GRID, size, center)
+    assert contiguous(mask, GRID)
+    assert 1 <= mask.sum() <= size
+
+
+# ---------------------------------------------------------------------------
+# path planner
+# ---------------------------------------------------------------------------
+
+def test_mst_is_spanning_tree():
+    edges = prim_mst(GRID.angular_distance)
+    assert len(edges) == N - 1
+    # connectivity via union-find
+    parent = list(range(N))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in edges:
+        parent[find(a)] = find(b)
+    assert len({find(i) for i in range(N)}) == 1
+
+
+@given(contiguous_masks(max_size=12), st.integers(0, N - 1))
+@settings(max_examples=30, deadline=None)
+def test_walk_visits_every_cell_exactly_once(mask, start):
+    planner = planner_for(GRID)
+    order = planner.subtree_walk(mask, start)
+    assert sorted(order) == sorted(np.flatnonzero(mask).tolist())
+
+
+@given(contiguous_masks(max_size=12), st.integers(0, N - 1))
+@settings(max_examples=30, deadline=None)
+def test_walk_within_2x_optimal_mst_bound(mask, start):
+    """Preorder walk length <= 2 * MST weight of the shape (the classic
+    2-approximation guarantee)."""
+    planner = planner_for(GRID)
+    cells = np.flatnonzero(mask)
+    if cells.size < 2:
+        return
+    order = planner.subtree_walk(mask, start)
+    walk = planner.path_time(order, rotation_speed=1.0)
+    sub = GRID.angular_distance[np.ix_(cells, cells)]
+    mst_w = sum(sub[a, b] for a, b in prim_mst(sub))
+    start_cost = GRID.angular_distance[start][cells].min()
+    assert walk <= 2 * mst_w + start_cost + 1e-6
+
+
+@given(contiguous_masks(max_size=10), labels_arrays, st.integers(0, N - 1))
+@settings(max_examples=20, deadline=None)
+def test_shrink_to_budget_feasible_result(mask, labels, start):
+    planner = planner_for(GRID)
+    budget = 0.05
+    cells, order, t = planner.shrink_to_budget(
+        mask, start, labels, rotation_speed=400.0, time_budget=budget,
+        per_cell_cost=0.005)
+    assert cells.sum() >= 1
+    if cells.sum() > 1:
+        assert t <= budget + 1e-9
+    assert contiguous(cells, GRID)
+
+
+# ---------------------------------------------------------------------------
+# tradeoff coherence
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+       st.sampled_from([1.0, 5.0, 15.0, 30.0]))
+@settings(max_examples=40, deadline=None)
+def test_plan_is_coherent(train_acc, var, fps):
+    from repro.core.tradeoff import BudgetConfig, NetworkEstimator, \
+        plan_timestep
+    net = NetworkEstimator()
+    net.observe(24.0, 0.02)
+    cfg = BudgetConfig(fps=fps)
+    k, t_explore, max_cells = plan_timestep(train_acc, var, net, cfg)
+    assert cfg.min_send <= k <= cfg.max_send
+    assert max_cells >= 1
+    assert t_explore >= 0
+    # coherence: we never plan to send more frames than cells we explore
+    assert k <= max_cells

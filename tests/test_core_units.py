@@ -1,0 +1,149 @@
+"""Unit tests for EWMA labels, ranking semantics, zoom, continual replay."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ewma, rank, zoom as zoom_mod
+from repro.core.continual import ReplayBuffer, balanced_counts
+from repro.core.grid import DEFAULT_GRID
+from repro.core.rank import Query, Workload
+
+GRID = DEFAULT_GRID
+N = GRID.n_cells
+
+
+# ---------------------------------------------------------------------------
+# EWMA (JAX fleet variant)
+# ---------------------------------------------------------------------------
+
+def test_ewma_first_visit_sets_value():
+    st = ewma.init_state(N)
+    visited = jnp.zeros(N, bool).at[3].set(True)
+    vals = jnp.zeros(N).at[3].set(0.7)
+    st = ewma.update(st, visited, vals)
+    assert float(st.acc[3]) == pytest.approx(0.7)
+    assert float(st.delta[3]) == 0.0
+    assert float(st.seen[3]) == 1.0
+    assert float(st.acc[0]) == 0.0
+
+
+def test_ewma_converges_to_constant_signal():
+    st = ewma.init_state(N)
+    visited = jnp.ones(N, bool)
+    vals = jnp.full(N, 0.5)
+    for _ in range(50):
+        st = ewma.update(st, visited, vals)
+    np.testing.assert_allclose(np.asarray(st.acc), 0.5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st.delta), 0.0, atol=1e-3)
+
+
+def test_ewma_labels_positive():
+    st = ewma.init_state(N)
+    # negative delta stream should still produce positive labels
+    visited = jnp.ones(N, bool)
+    for v in [0.9, 0.5, 0.1]:
+        st = ewma.update(st, visited, jnp.full(N, v))
+    lab = ewma.labels(st)
+    assert bool(jnp.all(lab > 0))
+
+
+# ---------------------------------------------------------------------------
+# rank semantics (§3.1)
+# ---------------------------------------------------------------------------
+
+def test_count_score_is_relative_to_max():
+    s = rank.query_scores("count", np.array([2, 4, 0]), np.zeros(3),
+                          np.zeros(3))
+    np.testing.assert_allclose(s, [0.5, 1.0, 0.0])
+
+
+def test_binary_score_saturates():
+    s = rank.query_scores("binary", np.array([5, 1, 0]), np.zeros(3),
+                          np.zeros(3))
+    np.testing.assert_allclose(s, [1.0, 1.0, 0.0])
+
+
+def test_detect_score_prefers_area_at_equal_count():
+    s = rank.query_scores("detect", np.array([2, 2]),
+                          np.array([0.1, 0.3]), np.zeros(2))
+    assert s[1] > s[0]
+
+
+def test_agg_count_favors_unexplored():
+    s = rank.query_scores("agg_count", np.array([3, 3]), np.zeros(2),
+                          np.array([0.0, 50.0]))
+    assert s[0] > s[1]          # same count, less-visited wins
+
+
+def test_workload_prediction_averages_queries():
+    wl = Workload((Query("yolov4", "person", "count"),
+                   Query("ssd", "car", "binary")))
+    counts = {("yolov4", "person"): np.array([2.0, 4.0]),
+              ("ssd", "car"): np.array([0.0, 1.0])}
+    areas = {k: np.zeros(2) for k in counts}
+    pred = rank.predict_workload_accuracy(wl, counts, areas, np.zeros(2))
+    np.testing.assert_allclose(pred, [(0.5 + 0.0) / 2, (1.0 + 1.0) / 2])
+
+
+# ---------------------------------------------------------------------------
+# zoom controller (§3.3)
+# ---------------------------------------------------------------------------
+
+def test_zoom_in_on_tight_cluster():
+    cfg = zoom_mod.ZoomConfig()
+    st = zoom_mod.ZoomState.create(N)
+    cell = 12
+    center = GRID.centers[cell]
+    centers = center + np.array([[0.5, 0.5], [-0.5, -0.5]])
+    sizes = np.full((2, 2), 1.0)
+    z = zoom_mod.select_zoom(GRID, cfg, st, cell, centers, sizes, dt=1 / 15)
+    assert z > 0
+
+
+def test_zoom_out_when_empty():
+    cfg = zoom_mod.ZoomConfig()
+    st = zoom_mod.ZoomState.create(N)
+    z = zoom_mod.select_zoom(GRID, cfg, st, 12, np.zeros((0, 2)),
+                             np.zeros((0, 2)), dt=1 / 15)
+    assert z == 0
+
+
+def test_zoom_auto_out_after_3s():
+    cfg = zoom_mod.ZoomConfig(zoom_out_after=3.0)
+    st = zoom_mod.ZoomState.create(N)
+    st.zoom_idx[12] = 2
+    st.zoomed_since[12] = 2.95
+    center = GRID.centers[12]
+    z = zoom_mod.select_zoom(GRID, cfg, st, 12,
+                             center[None] + 0.1, np.full((1, 2), 0.5),
+                             dt=0.1)
+    assert z == 0               # timer expired despite tight cluster
+
+
+# ---------------------------------------------------------------------------
+# continual replay balancing (§3.2)
+# ---------------------------------------------------------------------------
+
+def test_balanced_counts_pads_neighbors():
+    window = np.zeros(N, int)
+    window[12] = 10             # only the latest cell has fresh samples
+    t = balanced_counts(window, 12, GRID, pad_hops=3, decay=0.5)
+    hops = GRID.hop_distance[12]
+    assert t[12] == 10
+    assert np.all(t[hops <= 3] == 10)          # padded to max
+    far = t[hops == 4]
+    if far.size:
+        assert np.all(far == 5)                # 10 * 0.5^1
+
+
+def test_balanced_counts_empty_window():
+    t = balanced_counts(np.zeros(N, int), 0, GRID)
+    assert np.all(t == 0)
+
+
+def test_replay_buffer_caps_capacity():
+    buf = ReplayBuffer(n_cells=N, capacity_per_cell=4)
+    for i in range(10):
+        buf.add(3, f"s{i}")
+    assert buf.count(3) == 4
+    assert buf.recent(3, 2) == ["s8", "s9"]

@@ -1,0 +1,160 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.box_iou.ops import box_iou, match_boxes, nms_mask
+from repro.kernels.box_iou.ref import box_iou_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.frame_delta.ops import apply_delta, frame_delta
+from repro.kernels.frame_delta.ref import frame_delta_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, Sq, Sk, Hq, Hkv, D, causal, dtype)
+    (1, 64, 64, 2, 2, 32, False, jnp.float32),
+    (2, 128, 128, 4, 2, 64, True, jnp.float32),
+    (1, 100, 100, 2, 1, 24, True, jnp.float32),     # ragged + MQA
+    (1, 1, 96, 4, 4, 16, False, jnp.float32),       # decode shape
+    (2, 72, 136, 3, 1, 48, False, jnp.float32),     # Sq != Sk
+    (1, 64, 64, 2, 2, 32, False, jnp.bfloat16),
+    (1, 256, 256, 2, 2, 128, True, jnp.float32),    # full MXU tile dims
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES,
+                         ids=[str(c) for c in FLASH_CASES])
+def test_flash_attention_matches_ref(case):
+    B, Sq, Sk, Hq, Hkv, D, causal, dtype = case
+    kq, kk, kv = jax.random.split(jax.random.fold_in(KEY, hash(case) % 997), 3)
+    q = jax.random.normal(kq, (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(kk, (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(kv, (B, Sk, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+
+    g = Hq // Hkv
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3), g, 1)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3), g, 1)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), kr, vr,
+                        causal=causal).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_q_offset():
+    """Decode with a cache: q_offset shifts the causal mask."""
+    q = jax.random.normal(KEY, (1, 8, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 32, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 32, 2, 16))
+    out = flash_attention(q, k, v, causal=True, q_offset=24,
+                          block_q=8, block_k=8)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True,
+                        q_offset=24).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# box IoU + NMS + matching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(8, 8), (37, 13), (128, 256), (5, 300),
+                                 (1, 1)])
+def test_box_iou_matches_ref(n, m):
+    ka, kb = jax.random.split(jax.random.fold_in(KEY, n * 1000 + m))
+    a = jnp.abs(jax.random.normal(ka, (n, 4))) * 0.3 + 0.05
+    b = jnp.abs(jax.random.normal(kb, (m, 4))) * 0.3 + 0.05
+    np.testing.assert_allclose(np.asarray(box_iou(a, b)),
+                               np.asarray(box_iou_ref(a, b)), atol=1e-6)
+
+
+def test_iou_identity():
+    boxes = jnp.abs(jax.random.normal(KEY, (16, 4))) * 0.2 + 0.1
+    iou = box_iou(boxes, boxes)
+    np.testing.assert_allclose(np.asarray(jnp.diag(iou)), 1.0, atol=1e-5)
+
+
+def test_nms_suppresses_overlaps():
+    boxes = jnp.array([[0.5, 0.5, 0.2, 0.2], [0.51, 0.5, 0.2, 0.2],
+                       [0.9, 0.9, 0.1, 0.1]])
+    keep = nms_mask(boxes, jnp.array([0.9, 0.8, 0.7]), jnp.ones(3, bool))
+    assert bool(keep[0]) and not bool(keep[1]) and bool(keep[2])
+
+
+def test_nms_respects_validity():
+    boxes = jnp.array([[0.5, 0.5, 0.2, 0.2], [0.9, 0.9, 0.1, 0.1]])
+    keep = nms_mask(boxes, jnp.array([0.9, 0.8]),
+                    jnp.array([False, True]))
+    assert not bool(keep[0]) and bool(keep[1])
+
+
+def test_match_boxes_one_to_one():
+    pred = jnp.array([[0.5, 0.5, 0.2, 0.2], [0.5, 0.5, 0.2, 0.2]])
+    gt = jnp.array([[0.5, 0.5, 0.2, 0.2]])
+    tp, m = match_boxes(pred, gt, jnp.ones(1, bool))
+    # only the first (higher-ranked) pred claims the single GT
+    assert bool(tp[0]) and not bool(tp[1])
+    assert int(m[0]) == 0 and int(m[1]) == -1
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 16, 64), (2, 100, 256), (7, 33),
+                                   (1, 1, 8), (512, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (shape[-1],)) + 1.0
+    out = rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# frame delta
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw", [(128, 128), (224, 224), (64, 256)])
+def test_frame_delta_matches_ref(hw):
+    H, W = hw
+    cur = jax.random.uniform(KEY, (H, W, 3))
+    prev = jnp.clip(cur.at[: H // 2, : W // 2].add(0.3), 0, 1)
+    dq, ch, byt = frame_delta(cur, prev, tile_h=16, tile_w=128)
+    ph, pw = (-H) % 16, (-W) % 128
+    curp = jnp.pad(cur, ((0, ph), (0, pw), (0, 0)))
+    prevp = jnp.pad(prev, ((0, ph), (0, pw), (0, 0)))
+    dq_r, ch_r = frame_delta_ref(curp, prevp, tile_h=16, tile_w=128)
+    np.testing.assert_array_equal(np.asarray(dq), np.asarray(dq_r[:H, :W]))
+    np.testing.assert_array_equal(np.asarray(ch), np.asarray(ch_r))
+    assert int(byt) > 0
+
+
+def test_frame_delta_reconstruction():
+    cur = jax.random.uniform(KEY, (64, 128, 3))
+    prev = jnp.clip(cur + 0.2, 0, 1)       # every tile changes
+    dq, ch, _ = frame_delta(cur, prev, tile_h=16, tile_w=128)
+    rec = apply_delta(prev, dq)
+    assert float(jnp.max(jnp.abs(rec - cur))) < 1.0 / 127 + 1e-3
+
+
+def test_frame_delta_identical_frames_send_nothing():
+    cur = jax.random.uniform(KEY, (64, 128, 3))
+    dq, ch, byt = frame_delta(cur, cur)
+    assert int(ch.sum()) == 0
+    assert not bool(jnp.any(dq != 0))

@@ -1,0 +1,128 @@
+"""Scene simulator: determinism, dynamics statistics, rendering."""
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_GRID
+from repro.data import Scene, SceneConfig, build_video, gt_boxes, render_image
+from repro.data.render import boxes_to_scene
+
+GRID = DEFAULT_GRID
+
+
+def test_scene_is_deterministic():
+    a = Scene(SceneConfig(seed=5))
+    b = Scene(SceneConfig(seed=5))
+    for _ in range(30):
+        a.step()
+        b.step()
+    np.testing.assert_array_equal(a.pos, b.pos)
+    np.testing.assert_array_equal(a.oid, b.oid)
+
+
+def test_objects_stay_in_bounds():
+    s = Scene(SceneConfig(seed=2))
+    for _ in range(200):
+        s.step()
+        people = s.pos[s.kind == 0]
+        assert np.all(people[:, 0] >= -1) and np.all(people[:, 0] <= 151)
+        assert np.all(people[:, 1] >= -1) and np.all(people[:, 1] <= 76)
+
+
+def test_cars_respawn_with_new_ids():
+    s = Scene(SceneConfig(seed=3, n_people=0, n_cars=6, car_speed=40.0))
+    ids0 = set(s.oid.tolist())
+    for _ in range(300):
+        s.step()
+    assert set(s.oid.tolist()) != ids0      # at least one car cycled
+
+
+def test_gt_boxes_normalized():
+    s = Scene(SceneConfig(seed=1))
+    for _ in range(10):
+        s.step()
+    snap = s.snapshot()
+    for cell in range(GRID.n_cells):
+        for z in (1.0, 2.0, 3.0):
+            gt = gt_boxes(snap, GRID, cell, z)
+            if len(gt["boxes"]):
+                assert gt["boxes"].min() >= -1e-6
+                assert gt["boxes"].max() <= 1 + 1e-6
+
+
+def test_zoom_scales_apparent_size():
+    s = Scene(SceneConfig(seed=4))
+    for _ in range(20):
+        s.step()
+    snap = s.snapshot()
+    found = 0
+    for cell in range(GRID.n_cells):
+        g1 = gt_boxes(snap, GRID, cell, 1.0)
+        g2 = gt_boxes(snap, GRID, cell, 2.0)
+        common = set(g1["ids"].tolist()) & set(g2["ids"].tolist())
+        for oid in common:
+            i1 = g1["ids"].tolist().index(oid)
+            i2 = g2["ids"].tolist().index(oid)
+            # fully-visible objects: apparent size ~doubles at zoom 2
+            if g1["visibility"][i1] > 0.99 and g2["visibility"][i2] > 0.99:
+                ratio = g2["apparent"][i2] / g1["apparent"][i1]
+                assert 1.8 < ratio < 2.2
+                found += 1
+    assert found > 0
+
+
+def test_boxes_to_scene_inverts_gt():
+    s = Scene(SceneConfig(seed=6))
+    for _ in range(15):
+        s.step()
+    snap = s.snapshot()
+    for cell in [6, 12, 18]:
+        gt = gt_boxes(snap, GRID, cell, 1.0)
+        if not len(gt["boxes"]):
+            continue
+        centers, sizes = boxes_to_scene(gt["boxes"], GRID, cell, 1.0)
+        # recovered scene centers must sit inside the cell's FOV
+        x0, y0 = GRID.centers[cell] - np.array(GRID.fov(1.0)) / 2
+        fw, fh = GRID.fov(1.0)
+        assert np.all(centers[:, 0] >= x0 - 1e-6)
+        assert np.all(centers[:, 0] <= x0 + fw + 1e-6)
+
+
+def test_render_image_shows_objects():
+    s = Scene(SceneConfig(seed=1))
+    for _ in range(20):
+        s.step()
+    snap = s.snapshot()
+    # find a populated cell
+    for cell in range(GRID.n_cells):
+        gt = gt_boxes(snap, GRID, cell, 1.0)
+        if len(gt["boxes"]) > 0:
+            img = render_image(snap, GRID, cell, 1.0, res=64)
+            assert img.shape == (64, 64, 3)
+            assert img.min() >= 0 and img.max() <= 1
+            return
+    pytest.fail("no populated cell found")
+
+
+def test_video_statistics_match_paper_regime():
+    """Figures 3/9: best orientation dwell is seconds-scale and shifts are
+    spatially local (median <= 2 hops)."""
+    from repro.serving import detection_tables, workload_acc_table
+    from repro.core import Query, Workload
+    video = build_video(GRID, SceneConfig(fps=15, seed=11), duration_s=30.0)
+    wl = Workload((Query("yolov4", "person", "count"),))
+    tables = detection_tables(video, wl)
+    acc = workload_acc_table(video, wl, tables)
+    best = acc.max(-1).argmax(-1)                  # [T] best cell
+    # dwell lengths
+    dwells, run = [], 1
+    for t in range(1, len(best)):
+        if best[t] == best[t - 1]:
+            run += 1
+        else:
+            dwells.append(run)
+            run = 1
+    assert len(dwells) > 3, "best orientation never changes — too static"
+    # spatial locality of switches
+    hops = [GRID.hop_distance[best[t - 1], best[t]]
+            for t in range(1, len(best)) if best[t] != best[t - 1]]
+    assert np.median(hops) <= 2.5

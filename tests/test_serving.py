@@ -1,0 +1,159 @@
+"""Serving-pipeline integration tests on a small shared substrate."""
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_GRID, Query, Workload
+from repro.core.tradeoff import BudgetConfig
+from repro.data import SceneConfig, build_video
+from repro.serving import (
+    NetworkTrace,
+    detection_tables,
+    run_madeye,
+    run_scheme,
+    workload_acc_table,
+)
+from repro.serving.accuracy import query_acc_table
+from repro.serving.teachers import TEACHERS, approx_observation, run_teacher
+
+GRID = DEFAULT_GRID
+WL = Workload((
+    Query("yolov4", "person", "count"),
+    Query("frcnn", "car", "detect"),
+    Query("ssd", "person", "binary"),
+    Query("tiny-yolov4", "person", "agg_count"),
+))
+
+
+@pytest.fixture(scope="module")
+def substrate():
+    video = build_video(GRID, SceneConfig(fps=15, seed=7), duration_s=10.0)
+    tables = detection_tables(video, WL)
+    acc = workload_acc_table(video, WL, tables)
+    return video, tables, acc
+
+
+# ---------------------------------------------------------------------------
+# teachers
+# ---------------------------------------------------------------------------
+
+def test_teachers_are_deterministic(substrate):
+    video, _, _ = substrate
+    gt = dict(video.gt[5][12])
+    gt["cell"] = 12
+    a = run_teacher(TEACHERS["yolov4"], gt, 5, 0)
+    b = run_teacher(TEACHERS["yolov4"], gt, 5, 0)
+    np.testing.assert_array_equal(a["ids"], b["ids"])
+    np.testing.assert_array_equal(a["boxes"], b["boxes"])
+
+
+def test_teacher_bias_diversity(substrate):
+    """Different teachers must diverge on the same scene (paper C2)."""
+    video, _, _ = substrate
+    totals = {}
+    for name, prof in TEACHERS.items():
+        n = 0
+        for t in range(0, video.n_frames, 5):
+            for c in range(GRID.n_cells):
+                gt = dict(video.gt[t][c])
+                gt["cell"] = c
+                n += run_teacher(prof, gt, t, 0)["count"]
+        totals[name] = n
+    # the strong model sees strictly more than the weakest
+    assert totals["frcnn"] > totals["tiny-yolov4"]
+    assert len(set(totals.values())) > 1
+
+
+def test_approx_degrades_teacher(substrate):
+    video, tables, _ = substrate
+    key = ("yolov4", "person")
+    t_count = a_count = 0
+    for t in range(video.n_frames):
+        for c in range(GRID.n_cells):
+            det = tables[key].dets[1.0][t][c]
+            ap = approx_observation(det, miss_rate=0.3, seed_key=(t, c))
+            t_count += det["count"]
+            a_count += ap["count"]
+    assert a_count < t_count
+    assert a_count > 0.5 * t_count
+
+
+# ---------------------------------------------------------------------------
+# accuracy semantics
+# ---------------------------------------------------------------------------
+
+def test_acc_tables_in_unit_interval(substrate):
+    video, tables, acc = substrate
+    assert acc.shape == (video.n_frames, GRID.n_cells, 3)
+    assert float(acc.min()) >= 0.0 and float(acc.max()) <= 1.0
+
+
+def test_best_orientation_scores_one(substrate):
+    """The relative metric: some orientation hits 1.0 whenever anything is
+    detectable (count task)."""
+    video, tables, _ = substrate
+    qacc = query_acc_table(video, tables[("yolov4", "person")], "count")
+    row_max = qacc.reshape(video.n_frames, -1).max(1)
+    assert np.all(row_max >= 1.0 - 1e-9)
+
+
+def test_oracle_ordering(substrate):
+    """best_dynamic >= best_fixed >= one_time_fixed (oracle dominance)."""
+    video, tables, acc = substrate
+    b = BudgetConfig(fps=15)
+    accs = {s: run_scheme(video, WL, tables, s, budget=b,
+                          acc_table=acc).accuracy
+            for s in ("one_time_fixed", "best_fixed", "best_dynamic")}
+    assert accs["best_dynamic"] >= accs["best_fixed"] - 1e-9
+    assert accs["best_fixed"] >= accs["one_time_fixed"] - 0.02
+
+
+# ---------------------------------------------------------------------------
+# MadEye end-to-end
+# ---------------------------------------------------------------------------
+
+def test_madeye_end_to_end(substrate):
+    video, tables, acc = substrate
+    trace = NetworkTrace.fixed(24, 20, video.n_frames)
+    res = run_madeye(video, WL, tables, BudgetConfig(fps=5), trace,
+                     acc_table=acc)
+    assert 0.0 < res.accuracy <= 1.0
+    assert res.mean_shape >= 1.0
+    assert res.frames_sent >= len(res.visited)
+    # every shipped orientation was actually explored that timestep
+    for t, sent in res.visited.items():
+        for (c, zi) in sent:
+            assert c in res.explored[t]
+            assert 0 <= zi < 3
+
+
+def test_madeye_beats_one_time_fixed(substrate):
+    video, tables, acc = substrate
+    trace = NetworkTrace.fixed(24, 20, video.n_frames)
+    m = run_madeye(video, WL, tables, BudgetConfig(fps=1), trace,
+                   acc_table=acc)
+    otf = run_scheme(video, WL, tables, "one_time_fixed",
+                     budget=BudgetConfig(fps=1), acc_table=acc)
+    assert m.accuracy > otf.accuracy - 0.02
+
+
+def test_madeye_bounded_by_best_dynamic_plus_sends(substrate):
+    video, tables, acc = substrate
+    trace = NetworkTrace.fixed(24, 20, video.n_frames)
+    m = run_madeye(video, WL, tables, BudgetConfig(fps=5), trace,
+                   acc_table=acc)
+    bd = run_scheme(video, WL, tables, "best_dynamic",
+                    budget=BudgetConfig(fps=5), acc_table=acc)
+    # MadEye ships k>=1 frames so it can exceed 1-frame best_dynamic only
+    # via aggregate counting; give it that slack but keep a sane bound
+    assert m.accuracy <= bd.accuracy + 0.15
+
+
+def test_network_trace_affects_budget():
+    t_fast = NetworkTrace.fixed(60, 5, 10)
+    t_slow = NetworkTrace.fixed(6, 40, 10)
+    assert t_fast.transfer_time(0, 25_000) < t_slow.transfer_time(0, 25_000)
+
+
+def test_mobile_trace_has_fades():
+    tr = NetworkTrace.mobile(2000, seed=1)
+    assert tr.mbps.min() < 0.6 * tr.mbps.mean()

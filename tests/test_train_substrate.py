@@ -1,0 +1,202 @@
+"""Optimizers, checkpointing, compression, elasticity, fault handling."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train import checkpoint as ckpt
+from repro.train import compression as comp
+from repro.train import optim
+from repro.train.fault import HeartbeatTable, RestartPolicy, deadline_for_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    return {"layer": {"w": jax.random.normal(KEY, (8, 4)),
+                      "b": jnp.zeros(4)},
+            "head": {"w": jax.random.normal(jax.random.fold_in(KEY, 1),
+                                            (4, 2))}}
+
+
+def test_adamw_masking_freezes_leaves():
+    params = _toy_params()
+    mask = {"layer": {"w": False, "b": False}, "head": {"w": True}}
+    state = optim.adamw_init(params, mask)
+    grads = jax.tree.map(jnp.ones_like, params)
+    p2, _ = optim.adamw_update(params, grads, state, lr=0.1, mask=mask)
+    np.testing.assert_array_equal(np.asarray(p2["layer"]["w"]),
+                                  np.asarray(params["layer"]["w"]))
+    assert bool(jnp.any(p2["head"]["w"] != params["head"]["w"]))
+    # masked leaves carry scalar (empty) optimizer state — the 97% saving
+    assert state.mu["layer"]["w"].shape == ()
+    assert state.mu["head"]["w"].shape == (4, 2)
+
+
+def test_adamw_descends_quadratic():
+    p = {"w": jnp.array([3.0, -2.0])}
+    st_ = optim.adamw_init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, st_ = optim.adamw_update(p, g, st_, lr=0.05)
+    assert float(jnp.abs(p["w"]).max()) < 0.1
+
+
+def test_adafactor_memory_is_factored():
+    p = {"w": jnp.zeros((512, 256))}
+    st_ = optim.adafactor_init(p)
+    assert st_.vr["w"].shape == (512,)
+    assert st_.vc["w"].shape == (256,)
+    assert st_.v["w"].shape == ()
+    # state is ~(n+m)/(n*m) of AdamW's
+    adam_state = 2 * 512 * 256
+    fact_state = 512 + 256
+    assert fact_state < adam_state / 100
+
+
+def test_adafactor_descends_quadratic():
+    p = {"w": jnp.full((4, 4), 3.0)}
+    st_ = optim.adafactor_init(p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        p, st_ = optim.adafactor_update(p, g, st_, lr=0.05)
+    assert float(jnp.abs(p["w"]).max()) < 0.2
+
+
+def test_cosine_schedule_shape():
+    lr = optim.cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0, abs=0.01)
+    assert float(lr(100)) == pytest.approx(0.0, abs=0.01)
+    assert float(lr(55)) > float(lr(90))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression + error feedback
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_bounded(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3.0
+    q, scale = comp.quantize_int8(x)
+    err = jnp.abs(comp.dequantize_int8(q, scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_is_contraction():
+    """With a constant gradient, EF error stays bounded and the mean
+    dequantized signal converges to the true gradient."""
+    g = {"w": jax.random.normal(KEY, (128,))}
+    state = comp.init_ef(g)
+    acc = jnp.zeros((128,))
+    n = 50
+    for _ in range(n):
+        qs, scales, state = comp.compress(g, state)
+        acc = acc + comp.decompress(qs, scales)["w"]
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g["w"]),
+                               atol=1e-2)
+    assert float(jnp.abs(state.error.error["w"]
+                         if hasattr(state.error, "error")
+                         else state.error["w"]).max()) < 1.0
+
+
+def test_compression_wire_bytes():
+    g = {"w": jnp.zeros((1024,), jnp.float32)}
+    qs, scales, _ = comp.compress(g, comp.init_ef(g))
+    wire = qs["w"].size * 1 + 4
+    assert wire < g["w"].size * 4 / 3.9
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jax.random.normal(KEY, (16, 8)),
+                       "b": jnp.arange(8, dtype=jnp.float32)},
+            "step": jnp.asarray(7)}
+    d = str(tmp_path / "ckpt")
+    ckpt.save(d, 100, tree)
+    assert ckpt.latest_step(d) == 100
+    restored, manifest = ckpt.restore(d, 100, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["step"] == 100
+
+
+def test_checkpoint_prune_keeps_newest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.zeros(4)}
+    for s in [10, 20, 30, 40, 50]:
+        ckpt.save(d, s, tree)
+    ckpt.prune_old(d, keep=2)
+    assert ckpt.latest_step(d) == 50
+    remaining = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    assert len(remaining) == 2
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A half-written tmp dir must never be visible as a checkpoint."""
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.zeros(4)}
+    ckpt.save(d, 5, tree)
+    os.makedirs(os.path.join(d, "step_00000009.tmp-0"), exist_ok=True)
+    assert ckpt.latest_step(d) == 5
+
+
+# ---------------------------------------------------------------------------
+# fault handling
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_dead_hosts():
+    hb = HeartbeatTable(n_hosts=4, dead_after_s=10.0)
+    now = 1000.0
+    for h in range(4):
+        hb.beat(h, 0.5, now=now)
+    hb.beat(0, 0.5, now=now + 20)
+    dead = hb.dead_hosts(now=now + 20)
+    assert set(dead) == {1, 2, 3}
+
+
+def test_straggler_detection():
+    hb = HeartbeatTable(n_hosts=4)
+    for step in range(20):
+        for h in range(4):
+            hb.beat(h, 0.1 if h != 2 else 0.5)
+    assert hb.stragglers(tolerance=1.5) == [2]
+
+
+def test_restart_policy_prefers_elastic():
+    pol = RestartPolicy()
+    assert pol.decide(0, 256, 16) == "continue"
+    assert pol.decide(16, 256, 16) == "elastic_shrink"   # 240 % 16 == 0
+    assert pol.decide(15, 256, 16) == "full_restart"     # 241 % 16 != 0
+
+
+def test_restart_backoff_grows():
+    pol = RestartPolicy(backoff_base_s=1.0)
+    assert pol.backoff_s() < pol.backoff_s() < pol.backoff_s()
+
+
+def test_deadline_from_history():
+    assert deadline_for_step([0.1] * 50) == pytest.approx(0.2, abs=0.05) \
+        or deadline_for_step([0.1] * 50) >= 0.2 * 0.9
+    assert deadline_for_step([]) > 0
+
+
+# ---------------------------------------------------------------------------
+# elastic re-sharding
+# ---------------------------------------------------------------------------
+
+def test_rebalance_batch():
+    from repro.train.elastic import rebalance_batch, valid_submesh_sizes
+    assert rebalance_batch(256, old_dp=16, new_dp=12) == 192
+    assert 15 in valid_submesh_sizes(240, model_parallel=16)
