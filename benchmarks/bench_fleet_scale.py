@@ -1,0 +1,118 @@
+"""Fleet-scale controller throughput: jit'd scan vs the numpy loop.
+
+The ROADMAP north star is serving fleets, and the controller was the last
+per-camera Python loop in the system. This benchmark steps a >=256-camera
+fleet for >=64 controller timesteps in ONE jit'd lax.scan
+(repro/fleet/runner.py) and compares camera-steps/sec against the numpy
+`MadEyeController` driven exactly the way serving/pipeline.run_madeye
+drives it, on the same scene config (seed 3, 4-query workload, 3 fps
+response rate). Acceptance: >= 50x.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet_scale
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+N_STEPS = 64
+N_CAMERAS = 512 if os.environ.get("BENCH_FULL", "") == "" else 1024
+FPS = 3.0
+SEED = 3
+MISS = 0.12
+
+
+def _workload():
+    # the serve launcher's default 4-query workload — one definition, so
+    # the benchmarked controller matches what `serve --fleet` runs
+    from repro.launch.serve import DEFAULT_WORKLOAD
+    return DEFAULT_WORKLOAD
+
+
+def run(n_cameras: int = N_CAMERAS, n_steps: int = N_STEPS) -> dict:
+    import jax
+
+    from repro.core import DEFAULT_GRID
+    from repro.core.madeye import MadEyeController
+    from repro.core.tradeoff import BudgetConfig
+    from repro.data import SceneConfig, build_video
+    from repro.fleet import (
+        build_episode_tables,
+        fleet_config,
+        fleet_statics,
+        init_fleet,
+        run_fleet_episode,
+        workload_spec,
+    )
+    from repro.serving import NetworkTrace, detection_tables
+    from repro.serving.accuracy import workload_acc_table
+    from repro.serving.pipeline import _observation_from_tables
+
+    grid = DEFAULT_GRID
+    wl = _workload()
+    budget = BudgetConfig(fps=FPS)
+    stride = max(1, int(round(15 / FPS)))
+    duration = (n_steps * stride + 2) / 15.0
+    video = build_video(grid, SceneConfig(fps=15, seed=SEED), duration)
+    tables = detection_tables(video, wl)
+    acc = workload_acc_table(video, wl, tables)
+    trace = NetworkTrace.fixed(24.0, 20.0, video.n_frames)
+
+    # -- numpy reference: one camera, one Python call per timestep,
+    #    observations generated per step (how run_madeye drives it)
+    frames = list(range(0, video.n_frames, stride))[:n_steps]
+    ctrl = MadEyeController(grid, wl, budget=budget)
+    t0 = time.perf_counter()
+    for t in frames:
+        ctrl.report_network(trace.observed_mbps(t), trace.rtt_s)
+
+        def observe(cells, zooms, _t=t):
+            return [_observation_from_tables(tables, wl, grid, _t, c,
+                                             int(zi), MISS)
+                    for c, zi in zip(cells, zooms)]
+
+        ctrl.step(observe)
+    numpy_cps = len(frames) / (time.perf_counter() - t0)
+
+    # -- fleet: episode tables once, then one jit'd scan for all cameras
+    t0 = time.perf_counter()
+    ep = build_episode_tables(video, wl, tables, budget, trace,
+                              approx_miss=MISS, acc_table=acc,
+                              max_steps=n_steps)
+    table_build_s = time.perf_counter() - t0
+    cfg = fleet_config(grid, budget)
+    spec = workload_spec(wl)
+    statics = fleet_statics(grid)
+    state = init_fleet(grid, n_cameras)
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_fleet_episode(cfg, spec, statics, state, ep))
+    compile_s = time.perf_counter() - t0
+    best = np.inf
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _, out = jax.block_until_ready(
+            run_fleet_episode(cfg, spec, statics, state, ep))
+        best = min(best, time.perf_counter() - t0)
+    fleet_cps = n_cameras * ep.n_steps / best
+
+    return {
+        "cameras": n_cameras,
+        "steps": int(ep.n_steps),
+        "numpy_cps": float(numpy_cps),
+        "fleet_cps": float(fleet_cps),
+        "speedup": float(fleet_cps / numpy_cps),
+        "fleet_wall_s": float(best),
+        "compile_s": float(compile_s),
+        "table_build_s": float(table_build_s),
+        "mean_shape": float(np.asarray(out.n_explored, float).mean()),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    for k, v in out.items():
+        print(f"{k:14s} {v:.2f}" if isinstance(v, float) else
+              f"{k:14s} {v}")

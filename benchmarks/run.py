@@ -16,6 +16,7 @@ def main() -> None:
         bench_deepdive,
         bench_e2e_sweeps,
         bench_fixed_cameras,
+        bench_fleet_scale,
         bench_orientation_gains,
         bench_rank_quality,
         bench_roofline,
@@ -46,6 +47,9 @@ def main() -> None:
           lambda o: f"median_rank={o['detector_median_rank']:.1f}")
     timed("sec5_4_deepdive", bench_deepdive.run,
           lambda o: f"path_us={o['path_us']:.0f}")
+    timed("fleet_scale_controller", bench_fleet_scale.run,
+          lambda o: f"speedup={o['speedup']:.0f}x"
+                    f"@{o['cameras']}x{o['steps']}")
     timed("roofline_single", lambda: bench_roofline.run("single"),
           lambda o: f"cells={len(o)}")
     timed("roofline_multi", lambda: bench_roofline.run("multi"),

@@ -5,8 +5,9 @@ The controller is deliberately I/O-free: the serving pipeline hands it an
 `observe` callback that captures + approx-scores a set of (cell, zoom)
 orientations, and the controller returns which explored frames to ship to
 the backend. Host-side state is numpy (this is the camera-CPU logic the
-paper measures at 17 µs/step); the fleet-scale JAX variant lives in
-serving/engine.py and reuses core/ewma.py.
+paper measures at 17 µs/step); the fleet-scale JAX reimplementation lives
+in repro/fleet (one jit'd scan for a whole camera fleet) and reuses
+core/ewma.py.
 """
 from __future__ import annotations
 
@@ -99,7 +100,11 @@ class MadEyeController:
     # ------------------------------------------------------------------
     def step(self, observe: Callable[[list, np.ndarray], list]) -> StepResult:
         """One timestep. `observe(cells, zoom_idx)` must return a list of
-        `Observation` (one per cell, same order)."""
+        `Observation` (one per cell, same order).
+
+        The fleet-scale JAX reimplementation of this method is
+        repro.fleet.step.fleet_step; tests/test_fleet_parity.py keeps the
+        two decision-identical."""
         g = self.grid
 
         # 1. budget: frames to send + target shape size

@@ -83,27 +83,22 @@ class PathPlanner:
                         comp[v] = cid
                         stack.append(v)
 
-        # stitch components to the start's component greedily
+        # stitch components to the start's component greedily: cheapest
+        # cross edge between the done set and the rest, ties broken by
+        # row-major (u, v) node order so the JAX fleet walk (repro.fleet)
+        # makes the identical choice
         extra_adj: dict[int, list[int]] = {n: [] for n in node_set}
-        comps = {}
-        for n, c in comp.items():
-            comps.setdefault(c, []).append(n)
-        root_c = comp[start]
-        done = {root_c}
-        while len(done) < len(comps):
-            best = (np.inf, None, None, None)
-            for c, members in comps.items():
-                if c in done:
-                    continue
-                for c2 in done:
-                    sub = self.dist[np.ix_(comps[c2], members)]
-                    k = np.unravel_index(np.argmin(sub), sub.shape)
-                    if sub[k] < best[0]:
-                        best = (sub[k], comps[c2][k[0]], members[k[1]], c)
-            _, u, v, c = best
+        done_nodes = sorted(n for n in node_set if comp[n] == comp[start])
+        rest = sorted(node_set - set(done_nodes))
+        while rest:
+            sub = self.dist[np.ix_(done_nodes, rest)]
+            k = np.unravel_index(np.argmin(sub), sub.shape)
+            u, v = done_nodes[k[0]], rest[k[1]]
             extra_adj[u].append(v)
             extra_adj[v].append(u)
-            done.add(c)
+            joined = sorted(n for n in rest if comp[n] == comp[v])
+            done_nodes = sorted(set(done_nodes) | set(joined))
+            rest = [n for n in rest if comp[n] != comp[v]]
 
         # preorder DFS over (MST ∩ shape) + stitch edges
         order, seen, stack = [], set(), [start]
@@ -114,8 +109,10 @@ class PathPlanner:
             seen.add(u)
             order.append(u)
             nbrs = [v for v in self.adj[u] if v in node_set] + extra_adj[u]
-            # visit nearest-first (pop order reversed)
-            nbrs = sorted(set(nbrs) - seen, key=lambda v: -self.dist[u][v])
+            # visit nearest-first (pop order reversed); ties toward the
+            # lower cell id, deterministically (matches the fleet walk)
+            nbrs = sorted(set(nbrs) - seen,
+                          key=lambda v: (-self.dist[u][v], -v))
             stack.extend(nbrs)
         return order
 

@@ -24,16 +24,13 @@ from repro.core import neighbor as nb
 from repro.core.grid import OrientationGrid, removal_keeps_contiguity
 
 
-def seed_shape(grid: OrientationGrid, size: int,
-               center_cell: int | None = None) -> np.ndarray:
-    """Largest coverable rectangle of ~`size` cells around a center.
+def best_rect(grid: OrientationGrid, size: int) -> tuple[int, int]:
+    """Most-square (w, h) with w*h <= size on the grid lattice.
 
-    Paper: 'MadEye begins with a rectangular seed shape that reflects the
-    largest coverable area in the time budget, maximizing early
-    exploration.'
-    """
+    Shared by the numpy seed below and the fleet seed table
+    (repro.fleet.state._rect_table) so the two controllers can never
+    disagree on the seed geometry."""
     size = int(max(1, min(size, grid.n_cells)))
-    # pick the most-square w x h with w*h <= size
     best = (1, 1)
     for w in range(1, grid.n_pan + 1):
         for h in range(1, grid.n_tilt + 1):
@@ -42,7 +39,18 @@ def seed_shape(grid: OrientationGrid, size: int,
             elif (w * h == best[0] * best[1]
                   and abs(w - h) < abs(best[0] - best[1])):
                 best = (w, h)
-    w, h = best
+    return best
+
+
+def seed_shape(grid: OrientationGrid, size: int,
+               center_cell: int | None = None) -> np.ndarray:
+    """Largest coverable rectangle of ~`size` cells around a center.
+
+    Paper: 'MadEye begins with a rectangular seed shape that reflects the
+    largest coverable area in the time budget, maximizing early
+    exploration.'
+    """
+    w, h = best_rect(grid, size)
     if center_cell is None:
         center_cell = grid.cell_index(grid.n_pan // 2, grid.n_tilt // 2)
     cp, ct = grid.cell_coords(center_cell)
@@ -100,7 +108,9 @@ def evolve_shape(grid: OrientationGrid, shape_mask: np.ndarray,
             mask[H] = False
             mask[best] = True
         return mask
-    order = members[np.argsort(-labels[members])]   # head .. tail
+    # stable sort: ties break toward the lower cell id on both the numpy
+    # and the fleet (JAX) implementation, keeping them in lockstep
+    order = members[np.argsort(-labels[members], kind="stable")]
     h_i, t_i = 0, len(order) - 1
     thresh = cfg.base_threshold
     failed_once = False
@@ -150,7 +160,7 @@ def resize_shape(grid: OrientationGrid, mask: np.ndarray, labels: np.ndarray,
     # grow
     while mask.sum() < target_size:
         members = np.flatnonzero(mask)
-        order = members[np.argsort(-labels[members])]
+        order = members[np.argsort(-labels[members], kind="stable")]
         added = False
         for H in order:
             cand = nb.best_candidate(grid, mask, int(H), centroids, has_boxes)
@@ -163,7 +173,7 @@ def resize_shape(grid: OrientationGrid, mask: np.ndarray, labels: np.ndarray,
     # shrink
     while mask.sum() > target_size:
         members = np.flatnonzero(mask)
-        order = members[np.argsort(labels[members])]
+        order = members[np.argsort(labels[members], kind="stable")]
         removed = False
         for T in order:
             if removal_keeps_contiguity(mask, int(T), grid):

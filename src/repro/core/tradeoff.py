@@ -71,7 +71,10 @@ def frames_to_send(train_acc: float, pred_variance: float,
     """Risk-adjusted k. Paper example: 85% training accuracy and 25%
     variance -> at least 2 frames."""
     risk = (1.0 - train_acc) + pred_variance
-    k = 1 + int(np.floor(risk / 0.20))
+    # 1e-4 guard: the floor cut must not flip with float precision (the
+    # initial 0.15 + 0.25 risk lands exactly on a 0.20 boundary, and the
+    # f32 fleet controller must take the same branch as this f64 path)
+    k = 1 + int(np.floor(risk / 0.20 + 1e-4))
     return int(np.clip(k, cfg.min_send, cfg.max_send))
 
 
@@ -102,7 +105,8 @@ def exploration_budget(k_send: int, net: NetworkEstimator,
     per_extra = max(hop_time, cfg.approx_infer_s)
     # first cell is the camera's current orientation: inference only
     extra = (t_explore - cfg.approx_infer_s) / per_extra
-    max_cells = 1 + int(max(0, np.floor(extra))) if t_explore > 0 else 1
+    max_cells = 1 + int(max(0, np.floor(extra + 1e-4))) if t_explore > 0 \
+        else 1
     return max(t_explore, 0.0), max_cells
 
 

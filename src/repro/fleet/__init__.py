@@ -1,0 +1,31 @@
+"""Fleet-scale MadEye controller — the camera-side loop of paper §3.3
+reimplemented as pure-JAX fixed-shape functions over a [F, n_cells] fleet
+axis, so one jit'd program steps hundreds-to-thousands of cameras at once
+(the numpy reference lives in core/madeye.py and steps one camera per
+Python call).
+
+  state.py      controller-state pytree (mirrors MadEyeController state,
+                built on core/ewma.EWMAState) + static grid geometry
+  shape_ops.py  seed / head-tail evolve / resize as masked vectorized ops
+                with static iteration bounds
+  step.py       one fleet timestep: budget -> shape -> MST path + shrink
+                -> zoom -> rank -> EWMA update
+  runner.py     lax.scan episode runner over precomputed scene tables,
+                shardable over a mesh `data` axis
+"""
+from repro.fleet.state import (
+    FleetConfig,
+    FleetState,
+    FleetStatics,
+    WorkloadSpec,
+    fleet_config,
+    fleet_statics,
+    init_fleet,
+    workload_spec,
+)
+from repro.fleet.step import fleet_step
+from repro.fleet.runner import (
+    EpisodeTables,
+    build_episode_tables,
+    run_fleet_episode,
+)

@@ -1,0 +1,145 @@
+"""Episode runner: lax.scan over precomputed scene tables.
+
+The procedural scene (data/scene.py) is numpy and stateful, so the runner
+splits the episode the same way the serving pipeline does: the observation
+substrate — approx-model counts/areas/box geometry for every (frame, cell,
+zoom) plus the oracle accuracy table and network trace — is materialized
+once on the host (`build_episode_tables`, identical inputs to what
+run_madeye feeds MadEyeController), then the whole fleet episode runs as
+ONE jit'd lax.scan over those tables. The fleet axis shards over a mesh
+`data` axis (launch/mesh.py) via `shard_fleet`; the scanned tables are
+replicated (they are a few hundred KB).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rank import Workload
+from repro.core.tradeoff import BudgetConfig
+from repro.fleet.state import (
+    FleetConfig,
+    FleetState,
+    FleetStatics,
+    WorkloadSpec,
+    workload_spec,
+)
+from repro.fleet.step import FleetObs, FleetStepOut, fleet_step
+
+
+class EpisodeTables(NamedTuple):
+    """Scanned observation substrate; every leaf leads with [E] steps."""
+    counts: jnp.ndarray     # [E, N, Z, P]
+    areas: jnp.ndarray      # [E, N, Z, P]
+    centroid: jnp.ndarray   # [E, N, Z, 2]
+    spread: jnp.ndarray     # [E, N, Z]
+    extent: jnp.ndarray     # [E, N, Z]
+    nbox: jnp.ndarray       # [E, N, Z]
+    acc_true: jnp.ndarray   # [E, N, Z]
+    mbps: jnp.ndarray       # [E]
+    rtt: jnp.ndarray        # [E]
+
+    @property
+    def n_steps(self) -> int:
+        return self.counts.shape[0]
+
+
+def build_episode_tables(video, workload: Workload, tables: dict,
+                         budget: BudgetConfig, trace, *,
+                         approx_miss: float = 0.12,
+                         acc_table: np.ndarray | None = None,
+                         max_steps: int | None = None) -> EpisodeTables:
+    """Materialize what `observe` + the backend would return at every
+    (controller timestep, cell, zoom) — the exact observations
+    serving/pipeline.run_madeye feeds the numpy controller."""
+    from repro.serving import accuracy as acc_mod
+    from repro.serving.pipeline import ZOOM_LEVELS, _observation_from_tables
+
+    grid = video.grid
+    spec = workload_spec(workload)
+    n, z_n, p_n = grid.n_cells, len(ZOOM_LEVELS), len(spec.pairs)
+    if acc_table is None:
+        acc_table = acc_mod.workload_acc_table(video, workload, tables,
+                                               ZOOM_LEVELS)
+    stride = max(1, int(round(video.fps / budget.fps)))
+    frames = list(range(0, video.n_frames, stride))
+    if max_steps is not None:
+        frames = frames[:max_steps]
+    e = len(frames)
+
+    counts = np.zeros((e, n, z_n, p_n), np.float32)
+    areas = np.zeros((e, n, z_n, p_n), np.float32)
+    centroid = np.zeros((e, n, z_n, 2), np.float32)
+    spread = np.zeros((e, n, z_n), np.float32)
+    extent = np.zeros((e, n, z_n), np.float32)
+    nbox = np.zeros((e, n, z_n), np.int32)
+    acc_true = np.zeros((e, n, z_n), np.float32)
+    mbps = np.zeros(e, np.float32)
+
+    for ei, t in enumerate(frames):
+        acc_true[ei] = acc_table[t]
+        mbps[ei] = trace.observed_mbps(t)
+        for c in range(n):
+            for zi in range(z_n):
+                o = _observation_from_tables(tables, workload, grid, t, c,
+                                             zi, approx_miss)
+                for pi, pair in enumerate(spec.pairs):
+                    counts[ei, c, zi, pi] = o.counts.get(pair, 0)
+                    areas[ei, c, zi, pi] = o.areas.get(pair, 0.0)
+                k = o.box_centers.shape[0]
+                nbox[ei, c, zi] = k
+                if k:
+                    centroid[ei, c, zi] = o.centroid
+                    spread[ei, c, zi] = float(np.linalg.norm(
+                        o.box_centers - o.centroid, axis=1).mean())
+                    extent[ei, c, zi] = float(o.box_sizes.max())
+
+    return EpisodeTables(
+        counts=jnp.asarray(counts), areas=jnp.asarray(areas),
+        centroid=jnp.asarray(centroid), spread=jnp.asarray(spread),
+        extent=jnp.asarray(extent), nbox=jnp.asarray(nbox),
+        acc_true=jnp.asarray(acc_true), mbps=jnp.asarray(mbps),
+        rtt=jnp.full(e, float(trace.rtt_s), np.float32))
+
+
+def shard_fleet(state: FleetState, mesh) -> FleetState:
+    """Place the fleet axis of every state leaf on the mesh `data` axis."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def sh(x):
+        spec = P(*(("data",) + (None,) * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(sh, state)
+
+
+@partial(jax.jit, static_argnames=("cfg", "wl"))
+def _episode(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
+             state: FleetState, tables: EpisodeTables):
+    def body(st, xs):
+        # xs is one EpisodeTables step; match FleetObs fields by name
+        st, out = fleet_step(cfg, wl, statics, st,
+                             FleetObs(**xs._asdict()))
+        return st, out
+
+    return jax.lax.scan(body, state, tables)
+
+
+def run_fleet_episode(cfg: FleetConfig, wl: WorkloadSpec,
+                      statics: FleetStatics, state: FleetState,
+                      tables: EpisodeTables, *,
+                      mesh=None) -> tuple[FleetState, FleetStepOut]:
+    """Run the whole episode in one jit'd scan.
+
+    Returns (final state, FleetStepOut with leaves stacked to [E, F, ...]).
+    With `mesh`, the fleet axis is sharded over the mesh `data` axis first
+    (the scan then runs SPMD across devices, like launch/serve.py's
+    batched inference path).
+    """
+    if mesh is not None:
+        state = shard_fleet(state, mesh)
+    return _episode(cfg, wl, statics, state, tables)

@@ -1,0 +1,293 @@
+"""Masked, fixed-shape fleet versions of core/search.py (paper §3.3).
+
+Every function operates on the whole fleet batch at once: masks are
+[F, N] bool, per-camera scalars are [F]. The data-dependent while-loops of
+the numpy reference become lax.while_loops whose carry updates are masked
+per camera (`done` lanes no-op), with static iteration bounds guaranteed
+by the algorithm (each live iteration strictly shrinks the head/tail span
+or consumes a swap).
+
+Tie-breaking matches the numpy implementation exactly (stable sorts break
+toward the lower cell id; argmax/argmin return the first extremum), so a
+1-camera fleet reproduces MadEyeController's decisions bit for bit — the
+parity test in tests/test_fleet_parity.py asserts it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.fleet.state import FleetConfig, FleetStatics
+from repro.kernels.neighbor_score.ops import neighbor_scores
+
+INF = jnp.inf
+
+
+def _onehot(idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    """[F] int -> [F, n] bool."""
+    return jax.nn.one_hot(idx, n, dtype=jnp.bool_)
+
+
+def _scores(cfg: FleetConfig, statics: FleetStatics, mask, has_boxes,
+            centroids, head):
+    return neighbor_scores(
+        mask, has_boxes, centroids, head,
+        statics.d_center, statics.overlap,
+        statics.centers[:, 0], statics.centers[:, 1], statics.neighbor8,
+        use_kernel=cfg.use_kernel, interpret=cfg.kernel_interpret)
+
+
+# ---------------------------------------------------------------------------
+# contiguity (8-connected, batched log-doubling closure)
+# ---------------------------------------------------------------------------
+
+def induced_adj(mask: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
+    """[..., N] mask + [N, N] adjacency -> [..., N, N] induced adjacency."""
+    return adj & mask[..., None, :] & mask[..., :, None]
+
+
+def flood_reach(mask: jnp.ndarray, seed: jnp.ndarray,
+                adj: jnp.ndarray) -> jnp.ndarray:
+    """Cells of `mask` reachable from `seed` (both [..., N] bool).
+
+    `adj` may be the shared [N, N] lattice or a per-batch [..., N, N]
+    induced adjacency. One mat-vec hop per iteration, stopping at the
+    fixpoint — search shapes have diameter ~4, so the data-dependent
+    early exit beats both a fixed N-hop loop and an N^3 closure.
+    """
+    adj_f = adj.astype(jnp.float32)
+
+    def cond(c):
+        return c["changed"]
+
+    def body(c):
+        r = c["reach"]
+        hop = jnp.einsum("...n,...nm->...m", r.astype(jnp.float32), adj_f)
+        grown = mask & (r | (hop > 0))
+        return {"reach": grown, "changed": jnp.any(grown != r)}
+
+    out = lax.while_loop(
+        cond, body, {"reach": seed & mask, "changed": jnp.asarray(True)})
+    return out["reach"]
+
+
+def is_contiguous(mask: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
+    """[F, N] bool -> [F] bool (empty / singleton masks are contiguous)."""
+    n = mask.shape[-1]
+    first = jnp.argmax(mask, axis=-1)
+    reach = flood_reach(mask, _onehot(first, n), adj)
+    return jnp.all(~mask | reach, axis=-1)
+
+
+def first_removable(mask: jnp.ndarray, labels: jnp.ndarray,
+                    adj: jnp.ndarray) -> jnp.ndarray:
+    """Lowest-label member whose removal keeps the shape 8-connected,
+    falling back to the lowest-label member outright (the numpy shrink
+    rule). Returns T [F] int32.
+
+    Candidates are probed in label order with a while_loop — the first
+    candidate is almost always a removable leaf, so this costs ~1 single-
+    candidate contiguity check instead of testing all N members at once.
+    """
+    f, n = mask.shape
+    ord_asc = jnp.argsort(jnp.where(mask, labels, INF), stable=True)
+    m = jnp.sum(mask, axis=-1)
+
+    def cond(c):
+        return jnp.any(~c["found"]) & (c["r"] < n)
+
+    def body(c):
+        T = ord_asc[jnp.arange(f), jnp.minimum(c["r"], n - 1)]
+        ok = (is_contiguous(mask & ~_onehot(T, n), adj)
+              & (c["r"] < m))                  # rank must be a member
+        newly = ~c["found"] & ok
+        return {"pick": jnp.where(newly, T, c["pick"]),
+                "found": c["found"] | ok, "r": c["r"] + 1}
+
+    init = {"pick": ord_asc[:, 0].astype(jnp.int32),
+            "found": jnp.zeros(f, bool), "r": jnp.zeros((), jnp.int32)}
+    return lax.while_loop(cond, body, init)["pick"].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# rectangular seed
+# ---------------------------------------------------------------------------
+
+def seed_shape(statics: FleetStatics, cfg: FleetConfig, size: jnp.ndarray,
+               center: jnp.ndarray) -> jnp.ndarray:
+    """Batched core/search.seed_shape: size [F] int, center [F] int ->
+    [F, N] bool rectangle of ~size cells around center."""
+    n = cfg.n_cells
+    size = jnp.clip(size, 0, n)
+    w = statics.rect_w[size]                               # [F]
+    h = statics.rect_h[size]
+    cp = statics.coords[center, 0]
+    ct = statics.coords[center, 1]
+    p0 = jnp.clip(cp - w // 2, 0, cfg.n_pan - w)
+    t0 = jnp.clip(ct - h // 2, 0, cfg.n_tilt - h)
+    px = statics.coords[None, :, 0]                        # [1, N]
+    tx = statics.coords[None, :, 1]
+    return ((px >= p0[:, None]) & (px < (p0 + w)[:, None])
+            & (tx >= t0[:, None]) & (tx < (t0 + h)[:, None]))
+
+
+# ---------------------------------------------------------------------------
+# head/tail shape evolution
+# ---------------------------------------------------------------------------
+
+def _evolve_multi(cfg: FleetConfig, statics: FleetStatics, mask, labels,
+                  centroids, has_boxes):
+    """The >= 2-member head/tail swap loop, all cameras at once."""
+    f, n = mask.shape
+    # members by descending label, ties toward the lower cell id; the
+    # order is frozen at loop entry exactly like the numpy reference
+    order = jnp.argsort(jnp.where(mask, -labels, INF), stable=True)
+    m = jnp.sum(mask, axis=-1)
+
+    def cond(c):
+        # every live iteration breaks, advances the head (at most once per
+        # swap), or retires a tail — 2n + 2*max_swaps bounds the loop
+        return jnp.any(~c["done"]) & (c["it"] < 2 * n + 2 * cfg.max_swaps)
+
+    def body(c):
+        mask, done = c["mask"], c["done"]
+        h_i, t_i, thresh = c["h_i"], c["t_i"], c["thresh"]
+        failed, swaps = c["failed"], c["swaps"]
+
+        done = done | (h_i >= t_i) | (swaps >= cfg.max_swaps)
+        H = order[jnp.arange(f), h_i]
+        T = order[jnp.arange(f), t_i]
+        lab_h = labels[jnp.arange(f), H]
+        lab_t = labels[jnp.arange(f), T]
+        live = ~done & (lab_h / jnp.maximum(lab_t, 1e-9) > thresh)
+        done = done | (~done & ~live)      # insufficient disparity: break
+
+        scores, cand = _scores(cfg, statics, mask, has_boxes, centroids, H)
+        has_cand = jnp.any(cand, axis=-1)
+        best = jnp.argmax(jnp.where(cand, scores, -INF), axis=-1)
+
+        # no candidate: first failure advances the head, second ends
+        nc = live & ~has_cand
+        done = done | (nc & failed)
+        advance = nc & ~failed
+        h_i = jnp.where(advance, h_i + 1, h_i)
+        thresh = jnp.where(advance, cfg.base_threshold, thresh)
+        failed = jnp.where(advance, True, failed)
+
+        # candidate: swap if removing the tail keeps the trial contiguous
+        wc = live & has_cand
+        trial = mask | (_onehot(best, n) & wc[:, None])
+        keeps = is_contiguous(trial & ~_onehot(T, n), statics.neighbor8)
+        structural = wc & ~keeps
+        t_i = jnp.where(structural, t_i - 1, t_i)
+        swap = wc & keeps
+        mask = jnp.where(swap[:, None], trial & ~_onehot(T, n), mask)
+        failed = jnp.where(swap, False, failed)
+        swaps = jnp.where(swap, swaps + 1, swaps)
+        t_i = jnp.where(swap, t_i - 1, t_i)
+        thresh = jnp.where(swap, thresh * cfg.threshold_growth, thresh)
+
+        return {"mask": mask, "done": done, "h_i": h_i, "t_i": t_i,
+                "thresh": thresh, "failed": failed, "swaps": swaps,
+                "it": c["it"] + 1}
+
+    init = {"mask": mask, "done": m < 2,
+            "h_i": jnp.zeros(f, jnp.int32),
+            "t_i": jnp.maximum(m - 1, 0).astype(jnp.int32),
+            "thresh": jnp.full(f, cfg.base_threshold, jnp.float32),
+            "failed": jnp.zeros(f, bool),
+            "swaps": jnp.zeros(f, jnp.int32),
+            "it": jnp.zeros((), jnp.int32)}
+    return lax.while_loop(cond, body, init)["mask"]
+
+
+def _evolve_single(cfg: FleetConfig, statics: FleetStatics, mask, labels,
+                   centroids, has_boxes):
+    """1-member drift/jump branch of core/search.evolve_shape."""
+    f, n = mask.shape
+    H = jnp.argmax(mask, axis=-1)
+    lab_h = labels[jnp.arange(f), H]
+    best_global = jnp.argmax(labels, axis=-1)
+    lab_bg = jnp.max(labels, axis=-1)
+    jump = (best_global != H) & (lab_bg > lab_h * 2 * cfg.base_threshold)
+
+    scores, cand = _scores(cfg, statics, mask, has_boxes, centroids, H)
+    has_cand = jnp.any(cand, axis=-1)
+    best = jnp.argmax(jnp.where(cand, scores, -INF), axis=-1)
+    best_score = jnp.max(jnp.where(cand, scores, -INF), axis=-1)
+    lab_best = labels[jnp.arange(f), best]
+    moving_away = best_score > 1.05
+    promising = lab_best > lab_h * cfg.base_threshold
+    drift = ~jump & has_cand & (moving_away | promising)
+
+    target = jnp.where(jump, best_global, best)
+    move = jump | drift
+    moved = (mask & ~_onehot(H, n)) | _onehot(target, n)
+    return jnp.where(move[:, None], moved, mask)
+
+
+def evolve_shape(cfg: FleetConfig, statics: FleetStatics, mask: jnp.ndarray,
+                 labels: jnp.ndarray, centroids: jnp.ndarray,
+                 has_boxes: jnp.ndarray) -> jnp.ndarray:
+    """Batched core/search.evolve_shape. All [F, ...]; returns [F, N]."""
+    m = jnp.sum(mask, axis=-1)
+    multi = _evolve_multi(cfg, statics, mask, labels, centroids, has_boxes)
+
+    # the 1-member drift branch only exists under degenerate budgets —
+    # skip its scoring pass entirely when no camera is in that regime
+    def with_single(multi):
+        single = _evolve_single(cfg, statics, mask, labels, centroids,
+                                has_boxes)
+        return jnp.where((m == 1)[:, None], single, multi)
+
+    out = lax.cond(jnp.any(m == 1), with_single, lambda x: x, multi)
+    return jnp.where((m == 0)[:, None], mask, out)
+
+
+# ---------------------------------------------------------------------------
+# resize to the budgeted cell count
+# ---------------------------------------------------------------------------
+
+def resize_shape(cfg: FleetConfig, statics: FleetStatics, mask: jnp.ndarray,
+                 labels: jnp.ndarray, centroids: jnp.ndarray,
+                 has_boxes: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """Batched core/search.resize_shape: grow to / shrink to target [F]."""
+    f, n = mask.shape
+    target = jnp.clip(target, 1, n)
+    adj_f = statics.neighbor8.astype(jnp.float32)
+
+    # -- grow: add the best-scored neighbor of the highest-label member
+    #    that still has free neighbors
+    def g_cond(c):
+        return jnp.any(~c["stuck"] & (jnp.sum(c["mask"], -1) < target))
+
+    def g_body(c):
+        mask, stuck = c["mask"], c["stuck"]
+        live = ~stuck & (jnp.sum(mask, -1) < target)
+        free = ((~mask).astype(jnp.float32) @ adj_f) > 0       # any free nbr
+        eligible = mask & free
+        H = jnp.argmax(jnp.where(eligible, labels, -INF), axis=-1)
+        ok = jnp.any(eligible, axis=-1)
+        scores, cand = _scores(cfg, statics, mask, has_boxes, centroids, H)
+        best = jnp.argmax(jnp.where(cand, scores, -INF), axis=-1)
+        grow = live & ok
+        mask = mask | (_onehot(best, n) & grow[:, None])
+        stuck = stuck | (live & ~ok)
+        return {"mask": mask, "stuck": stuck}
+
+    mask = lax.while_loop(g_cond, g_body,
+                          {"mask": mask, "stuck": jnp.zeros(f, bool)})["mask"]
+
+    # -- shrink: drop the lowest-label member whose removal keeps the
+    #    shape connected; if none qualifies, drop the lowest regardless
+    def s_cond(c):
+        return jnp.any(jnp.sum(c["mask"], -1) > target)
+
+    def s_body(c):
+        mask = c["mask"]
+        live = jnp.sum(mask, -1) > target
+        T = first_removable(mask, labels, statics.neighbor8)
+        return {"mask": mask & ~(_onehot(T, n) & live[:, None])}
+
+    return lax.while_loop(s_cond, s_body, {"mask": mask})["mask"]

@@ -1,0 +1,248 @@
+"""Fleet controller state + statics.
+
+`FleetState` is the pytree analogue of the mutable attributes
+`MadEyeController.__post_init__` creates — every leaf carries a leading
+fleet axis [F] so the whole fleet is one pytree that vmaps/shards/scans.
+`FleetStatics` packs the grid geometry the step needs (device arrays,
+constant across the episode); `FleetConfig`/`WorkloadSpec` are hashable
+python-side configs that jit treats as static.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+from typing import NamedTuple
+
+from repro.core import ewma
+from repro.core.grid import OrientationGrid
+from repro.core.path import prim_mst
+from repro.core.rank import TASKS, Workload
+from repro.core.search import SearchConfig, best_rect, seed_shape
+from repro.core.tradeoff import BudgetConfig
+from repro.core.zoom import ZoomConfig
+from repro.kernels.neighbor_score.ops import geometry_arrays
+
+NET_WINDOW = 5
+NET_DEFAULT_MBPS = 24.0
+
+
+# ---------------------------------------------------------------------------
+# static configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Everything the step treats as compile-time constant."""
+    # grid
+    n_pan: int = 5
+    n_tilt: int = 5
+    pan_step: float = 30.0
+    tilt_step: float = 15.0
+    fov_scale: float = 2.0
+    zoom_levels: tuple = (1.0, 2.0, 3.0)
+    # budget (mirrors core/tradeoff.BudgetConfig)
+    fps: float = 15.0
+    rotation_speed: float = 400.0
+    hop_degrees: float = 30.0
+    approx_infer_s: float = 0.0067
+    backend_infer_s: float = 0.010
+    frame_bytes: int = 25_000
+    min_send: int = 1
+    max_send: int = 4
+    pipelined: bool = False
+    # search (mirrors core/search.SearchConfig)
+    base_threshold: float = 1.25
+    threshold_growth: float = 1.25
+    max_swaps: int = 8
+    # zoom (mirrors core/zoom.ZoomConfig)
+    zoom_out_after: float = 3.0
+    margin: float = 0.7
+    # controller (mirrors core/madeye.MadEyeController; the initial seed
+    # size is init_fleet's seed_size argument, not a config field)
+    delta_weight: float = 0.5
+    scout_every: int = 8
+    stale_decay: float = 0.995
+    # neighbor-score dispatch (Pallas kernel vs fused jnp reference);
+    # kernel_interpret=False compiles the kernel (TPU) instead of running
+    # it in the Pallas interpreter (the CPU-safe default)
+    use_kernel: bool = False
+    kernel_interpret: bool = True
+
+    @property
+    def n_cells(self) -> int:
+        return self.n_pan * self.n_tilt
+
+    @property
+    def timestep(self) -> float:
+        return 1.0 / self.fps
+
+
+def fleet_config(grid: OrientationGrid,
+                 budget: BudgetConfig | None = None,
+                 search_cfg: SearchConfig | None = None,
+                 zoom_cfg: ZoomConfig | None = None,
+                 **overrides) -> FleetConfig:
+    """Build a FleetConfig from the numpy-side config objects so both
+    controller implementations consume identical constants."""
+    budget = budget or BudgetConfig()
+    search_cfg = search_cfg or SearchConfig()
+    zoom_cfg = zoom_cfg or ZoomConfig()
+    kw = dict(
+        n_pan=grid.n_pan, n_tilt=grid.n_tilt,
+        pan_step=grid.pan_step, tilt_step=grid.tilt_step,
+        fov_scale=grid.fov_scale, zoom_levels=tuple(zoom_cfg.zoom_levels),
+        fps=budget.fps, rotation_speed=budget.rotation_speed,
+        hop_degrees=budget.hop_degrees,
+        approx_infer_s=budget.approx_infer_s,
+        backend_infer_s=budget.backend_infer_s,
+        frame_bytes=budget.frame_bytes,
+        min_send=budget.min_send, max_send=budget.max_send,
+        pipelined=budget.pipelined,
+        base_threshold=search_cfg.base_threshold,
+        threshold_growth=search_cfg.threshold_growth,
+        max_swaps=search_cfg.max_swaps,
+        zoom_out_after=zoom_cfg.zoom_out_after, margin=zoom_cfg.margin,
+    )
+    kw.update(overrides)
+    return FleetConfig(**kw)
+
+
+class WorkloadSpec(NamedTuple):
+    """Static query layout: queries[q] reads pair column pair_idx[q] of the
+    observation tables and scores with task task_id[q] (index into TASKS)."""
+    pairs: tuple            # ((model, obj), ...) — distinct, table order
+    pair_idx: tuple         # [Q] int — query -> pair column
+    task_id: tuple          # [Q] int — query -> TASKS index
+
+
+def workload_spec(workload: Workload) -> WorkloadSpec:
+    pairs = []
+    for q in workload.queries:
+        if (q.model, q.obj) not in pairs:
+            pairs.append((q.model, q.obj))
+    return WorkloadSpec(
+        pairs=tuple(pairs),
+        pair_idx=tuple(pairs.index((q.model, q.obj))
+                       for q in workload.queries),
+        task_id=tuple(TASKS.index(q.task) for q in workload.queries),
+    )
+
+
+# ---------------------------------------------------------------------------
+# statics (device arrays, constant across an episode)
+# ---------------------------------------------------------------------------
+
+class FleetStatics(NamedTuple):
+    centers: jnp.ndarray        # [N, 2] cell centers (degrees)
+    dist: jnp.ndarray           # [N, N] Chebyshev rotation distance
+    neighbor8: jnp.ndarray      # [N, N] bool — 8-connected lattice
+    overlap: jnp.ndarray        # [N, N] FOV overlap at zoom 1
+    mst_adj: jnp.ndarray        # [N, N] bool — full-grid MST edges
+    d_center: jnp.ndarray       # [N, N] euclidean center distance
+    rect_w: jnp.ndarray         # [N + 1] seed-rectangle width per size
+    rect_h: jnp.ndarray         # [N + 1] seed-rectangle height per size
+    coords: jnp.ndarray         # [N, 2] (pan_i, tilt_i) lattice coords
+    nbr_order: jnp.ndarray      # [N, N] cells by descending (dist, id)
+                                # from each cell — DFS push order
+
+
+def _rect_table(grid: OrientationGrid) -> tuple[np.ndarray, np.ndarray]:
+    """core/search.best_rect evaluated for every size (seed lookup)."""
+    n = grid.n_cells
+    ws = np.ones(n + 1, np.int32)
+    hs = np.ones(n + 1, np.int32)
+    for size in range(n + 1):
+        ws[size], hs[size] = best_rect(grid, size)
+    return ws, hs
+
+
+def fleet_statics(grid: OrientationGrid) -> FleetStatics:
+    geo = geometry_arrays(grid)
+    n = grid.n_cells
+    mst = np.zeros((n, n), bool)
+    for a, b in prim_mst(grid.angular_distance):
+        mst[a, b] = mst[b, a] = True
+    ws, hs = _rect_table(grid)
+    coords = np.array([grid.cell_coords(i) for i in range(n)], np.int32)
+    # static DFS push order: from u, all cells by descending rotation
+    # distance, ties toward the higher id — popping then visits nearest
+    # first with ties toward the lower id (core/path.subtree_walk's rule).
+    # Lexsort, not a composite float key: works at any grid granularity.
+    ids = np.arange(n)
+    nbr_order = np.stack([
+        np.lexsort((-ids, -grid.angular_distance[u])) for u in range(n)
+    ]).astype(np.int32)
+    return FleetStatics(
+        centers=jnp.asarray(grid.centers, jnp.float32),
+        dist=jnp.asarray(grid.angular_distance, jnp.float32),
+        neighbor8=jnp.asarray(geo["neighbor8"]),
+        overlap=jnp.asarray(geo["overlap"]),
+        mst_adj=jnp.asarray(mst),
+        d_center=jnp.asarray(geo["d_center"]),
+        rect_w=jnp.asarray(ws),
+        rect_h=jnp.asarray(hs),
+        coords=jnp.asarray(coords),
+        nbr_order=jnp.asarray(nbr_order),
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-camera state pytree
+# ---------------------------------------------------------------------------
+
+class FleetState(NamedTuple):
+    """Mirror of MadEyeController mutable state; leaves lead with [F]."""
+    ewma: ewma.EWMAState        # acc/delta/last/seen, each [F, N]
+    shape: jnp.ndarray          # [F, N] bool — current search shape
+    current_cell: jnp.ndarray   # [F] int32 — camera orientation
+    zoom_idx: jnp.ndarray       # [F, N] int32
+    zoomed_since: jnp.ndarray   # [F, N] f32 — seconds at > min zoom
+    centroids: jnp.ndarray      # [F, N, 2] — search geometry (sticky)
+    has_boxes: jnp.ndarray      # [F, N] bool
+    nb_centroid: jnp.ndarray    # [F, N, 2] — zoom geometry (last visit)
+    nb_spread: jnp.ndarray      # [F, N] — mean box dist to centroid
+    nb_extent: jnp.ndarray      # [F, N] — max box side
+    nb_has: jnp.ndarray         # [F, N] bool — boxes seen at last visit
+    train_acc: jnp.ndarray      # [F] — backend-reported approx accuracy
+    pred_var: jnp.ndarray       # [F] — variance of last predictions
+    saw_objects: jnp.ndarray    # [F] bool
+    step_idx: jnp.ndarray       # [F] int32
+    last_visit: jnp.ndarray     # [F, N] int32
+    net_samples: jnp.ndarray    # [F, NET_WINDOW] observed mbps
+    net_count: jnp.ndarray      # [F] int32 — filled window slots
+    rtt: jnp.ndarray            # [F] f32
+
+
+def init_fleet(grid: OrientationGrid, n_cameras: int,
+               seed_size: int = 6) -> FleetState:
+    """Same initial conditions as MadEyeController.__post_init__."""
+    if n_cameras < 1:
+        raise ValueError(f"n_cameras must be >= 1, got {n_cameras}")
+    n = grid.n_cells
+    f = n_cameras
+    shape0 = np.asarray(seed_shape(grid, seed_size), bool)
+    cur0 = int(np.flatnonzero(shape0)[0])
+    z_fn = lambda *s, dtype=jnp.float32: jnp.zeros((f, *s), dtype)
+    return FleetState(
+        ewma=ewma.EWMAState(z_fn(n), z_fn(n), z_fn(n), z_fn(n)),
+        shape=jnp.broadcast_to(jnp.asarray(shape0), (f, n)),
+        current_cell=jnp.full((f,), cur0, jnp.int32),
+        zoom_idx=z_fn(n, dtype=jnp.int32),
+        zoomed_since=z_fn(n),
+        centroids=z_fn(n, 2),
+        has_boxes=z_fn(n, dtype=bool),
+        nb_centroid=z_fn(n, 2),
+        nb_spread=z_fn(n),
+        nb_extent=z_fn(n),
+        nb_has=z_fn(n, dtype=bool),
+        train_acc=jnp.full((f,), 0.85, jnp.float32),
+        pred_var=jnp.full((f,), 0.25, jnp.float32),
+        saw_objects=jnp.ones((f,), bool),
+        step_idx=z_fn(dtype=jnp.int32),
+        last_visit=jnp.full((f, n), -1000, jnp.int32),
+        net_samples=z_fn(NET_WINDOW),
+        net_count=z_fn(dtype=jnp.int32),
+        rtt=jnp.full((f,), 0.02, jnp.float32),
+    )

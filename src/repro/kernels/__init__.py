@@ -4,6 +4,7 @@
   box_iou/          dense pairwise IoU + static-shape NMS/matching
   rmsnorm/          fused RMSNorm
   frame_delta/      tile-based frame delta encoder (MadEye transmission)
+  neighbor_score/   fleet-batched candidate-neighbor scoring (shape search)
 
 Each kernel package ships `<name>.py` (pl.pallas_call + BlockSpec),
 `ops.py` (jit'd public wrapper) and `ref.py` (pure-jnp oracle used by the

@@ -28,6 +28,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128  # TPU lane width; scratch second-minor dim
 
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; accept either
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   scale: float, causal: bool, q_offset: int, sq_valid: int,
@@ -139,7 +143,7 @@ def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((block_q, LANES), jnp.float32),   # running denom
             pltpu.VMEM((block_q, D), jnp.float32),       # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,2 @@
+from repro.kernels.neighbor_score import ops, ref
+from repro.kernels.neighbor_score.ops import geometry_arrays, neighbor_scores

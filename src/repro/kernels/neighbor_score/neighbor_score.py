@@ -1,0 +1,65 @@
+"""Batched candidate-neighbor scoring Pallas kernel (paper §3.3).
+
+The fleet controller's shape-evolution inner loop scores every lattice
+neighbor of a head orientation against the bbox geometry of the current
+shape — one [N, N] reduction per camera per loop iteration, repeated up to
+~n_cells times per timestep for every camera in the fleet. This kernel
+fuses the whole fleet batch: grid = (B / block_b,); each step loads a
+(block_b, Np) strip of per-camera state plus the (broadcast) [Np, Np]
+grid geometry and emits (block_b, Np) scores.
+
+All arrays are padded to Np = 128 cells (one f32 lane tile) by ops.py;
+padded cells carry member_has = 0 so they contribute nothing and score
+the neutral 1.0, which the candidate mask filters out. Per grid step the
+working set is 3 * (block_b, 128) strips + 4 static (128, 128) matrices
++ a (block_b, 128, 128) broadcast intermediate — ~4.3 MB f32 at
+block_b = 64, comfortably inside VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(mh_ref, cx_ref, cy_ref, dcen_ref, ovl_ref, gx_ref, gy_ref,
+                  o_ref):
+    mh = mh_ref[...].astype(jnp.float32)         # [bb, Np] member & has
+    cx = cx_ref[...].astype(jnp.float32)         # [bb, Np] centroid x
+    cy = cy_ref[...].astype(jnp.float32)
+    dcen = dcen_ref[...].astype(jnp.float32)     # [Np, Np] |center_c-center_o|
+    ovl = ovl_ref[...].astype(jnp.float32)       # [Np, Np] FOV overlap
+    gx = gx_ref[...].astype(jnp.float32)         # [Np, Np] cell_x[c] bcast
+    gy = gy_ref[...].astype(jnp.float32)
+
+    w = ovl[None, :, :] * mh[:, None, :]                         # [bb, c, o]
+    dx = gx[None, :, :] - cx[:, None, :]
+    dy = gy[None, :, :] - cy[:, None, :]
+    d_box = jnp.sqrt(dx * dx + dy * dy)
+    ratio = dcen[None, :, :] / jnp.maximum(d_box, 1e-6)
+    total = jnp.sum(w * ratio, axis=-1)                          # [bb, c]
+    total_w = jnp.sum(w, axis=-1)
+    score = jnp.where(total_w > 0.0,
+                      total / jnp.maximum(total_w, 1e-9), 1.0)
+    o_ref[...] = score.astype(o_ref.dtype)
+
+
+def neighbor_score_batch(member_has: jnp.ndarray, cent_x: jnp.ndarray,
+                         cent_y: jnp.ndarray, d_center: jnp.ndarray,
+                         overlap: jnp.ndarray, grid_x: jnp.ndarray,
+                         grid_y: jnp.ndarray, *, block_b: int = 64,
+                         interpret: bool = True) -> jnp.ndarray:
+    """member_has/cent_x/cent_y [B, Np]; d_center/overlap/grid_x/grid_y
+    [Np, Np]. B must be a multiple of block_b (ops.py pads). -> [B, Np]."""
+    B, Np = member_has.shape
+    grid = (B // block_b,)
+    strip = pl.BlockSpec((block_b, Np), lambda i: (i, 0))
+    full = pl.BlockSpec((Np, Np), lambda i: (0, 0))
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[strip, strip, strip, full, full, full, full],
+        out_specs=strip,
+        out_shape=jax.ShapeDtypeStruct((B, Np), jnp.float32),
+        interpret=interpret,
+    )(member_has, cent_x, cent_y, d_center, overlap, grid_x, grid_y)

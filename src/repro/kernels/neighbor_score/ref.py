@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for batched candidate-neighbor scoring (paper §3.3).
+
+Mirrors core/neighbor.score_candidates for a whole fleet at once: for a
+batch of cameras, each with a shape mask, per-cell bbox centroids and a
+head cell H, score every grid cell c as the overlap-weighted mean of
+
+    ratio(c, o) = dist(center_c, center_o) / dist(center_c, centroid_o)
+
+over shape members o with non-zero FOV overlap and boxes; cells with no
+informative overlap get the neutral score 1.0. Candidate masking (lattice
+neighbors of H not in the shape) is returned separately so the caller can
+arg-max over candidates only.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def neighbor_scores_ref(member_has: jnp.ndarray, cent_x: jnp.ndarray,
+                        cent_y: jnp.ndarray, d_center: jnp.ndarray,
+                        overlap: jnp.ndarray, cell_x: jnp.ndarray,
+                        cell_y: jnp.ndarray) -> jnp.ndarray:
+    """member_has [B, N] f32 — 1.0 where the cell is a shape member with
+    boxes; cent_x/cent_y [B, N] — bbox centroid per cell (scene degrees,
+    junk where member_has is 0); d_center/overlap [N, N] — pairwise cell
+    center distance / FOV overlap; cell_x/cell_y [N] — cell centers.
+
+    Returns scores [B, N] f32 for every cell as candidate.
+    """
+    w = overlap[None, :, :] * member_has[:, None, :]          # [B, c, o]
+    dx = cell_x[None, :, None] - cent_x[:, None, :]
+    dy = cell_y[None, :, None] - cent_y[:, None, :]
+    d_box = jnp.sqrt(dx * dx + dy * dy)
+    ratio = d_center[None, :, :] / jnp.maximum(d_box, 1e-6)
+    total = jnp.sum(w * ratio, axis=-1)
+    total_w = jnp.sum(w, axis=-1)
+    return jnp.where(total_w > 0, total / jnp.maximum(total_w, 1e-9), 1.0)

@@ -31,6 +31,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devices[:n])
 
 
+def make_abstract_mesh(shape: tuple, axes: tuple):
+    """Device-free mesh for sharding-rule tests / dry runs.
+
+    jax < 0.5 spells it AbstractMesh(((name, size), ...)); newer releases
+    take (sizes, names) positionally — accept both so the sharding tests
+    run on every toolchain in the support window.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh for unit tests (uses however many devices exist)."""
     devices = jax.devices()[: n_data * n_model]

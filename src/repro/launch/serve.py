@@ -38,8 +38,11 @@ DEFAULT_WORKLOAD = Workload((
 def serve(fps: float, duration: float, *, seed: int = 3,
           mbps: float = 24.0, rtt_ms: float = 20.0,
           rotation_speed: float = 400.0, pipelined: bool = False,
+          fleet: int = 0,
           grid: OrientationGrid = DEFAULT_GRID,
           workload: Workload = DEFAULT_WORKLOAD):
+    if fleet < 0:
+        raise SystemExit(f"--fleet must be >= 0, got {fleet}")
     t0 = time.time()
     video = build_video(grid, SceneConfig(fps=15, seed=seed), duration)
     tables = detection_tables(video, workload)
@@ -54,6 +57,19 @@ def serve(fps: float, duration: float, *, seed: int = 3,
     print(f"MadEye      : acc={res.accuracy:.3f} shape={res.mean_shape:.1f} "
           f"sent/step={res.frames_sent/len(res.visited):.1f} "
           f"best-explored={res.best_explored_rate:.2f}")
+    if fleet:
+        from repro.serving.engine import run_fleet_controller
+        t1 = time.time()
+        _, out = run_fleet_controller(video, workload, tables, budget,
+                                      trace, n_cameras=fleet, acc_table=acc)
+        n_steps = int(out.explored.shape[0])
+        wall = time.time() - t1
+        shapes = np.asarray(out.n_explored, float)
+        print(f"fleet x{fleet:<5d}: {n_steps} steps in {wall:.2f}s "
+              f"end-to-end incl. jit compile "
+              f"({fleet * n_steps / wall:.0f} camera-steps/s, "
+              f"mean shape {shapes.mean():.1f}; "
+              f"see benchmarks/bench_fleet_scale.py for steady-state)")
     for scheme in ("one_time_fixed", "best_fixed", "best_dynamic",
                    "panoptes", "tracking", "ucb1"):
         r = run_scheme(video, workload, tables, scheme, budget=budget,
@@ -71,10 +87,13 @@ def main():
     ap.add_argument("--rtt-ms", type=float, default=20.0)
     ap.add_argument("--rotation-speed", type=float, default=400.0)
     ap.add_argument("--pipelined", action="store_true")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="also run the JAX fleet controller (repro.fleet) "
+                         "with this many cameras")
     args = ap.parse_args()
     serve(args.fps, args.duration, seed=args.seed, mbps=args.mbps,
           rtt_ms=args.rtt_ms, rotation_speed=args.rotation_speed,
-          pipelined=args.pipelined)
+          pipelined=args.pipelined, fleet=args.fleet)
 
 
 if __name__ == "__main__":

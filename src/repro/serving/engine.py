@@ -8,6 +8,11 @@ the leading batch axis and shards over the mesh's `data` axis via pjit
 (launch/serve.py wires the mesh); controller state (EWMA labels) is a
 pytree with the same leading axis, updated with vmapped pure functions
 from core/ewma.py.
+
+`run_fleet_controller` drives the FULL per-timestep controller (shape
+search + path + zoom + rank, repro/fleet) for a whole fleet in one jit'd
+scan; the EWMA-only helpers below remain for pipelines that rank on the
+server side without camera-side shape search.
 """
 from __future__ import annotations
 
@@ -71,6 +76,36 @@ def init_fleet_state(n_cameras: int, n_cells: int) -> ewma.EWMAState:
 def fleet_topk_cells(labels: jnp.ndarray, k: int = 4):
     """labels [C, N] -> (values [C, k], cells [C, k]) — per-camera ranking."""
     return jax.lax.top_k(labels, k)
+
+
+def run_fleet_controller(video, workload, tables, budget, trace, *,
+                         n_cameras: int, mesh=None,
+                         approx_miss: float = 0.12,
+                         acc_table=None, max_steps: int | None = None):
+    """Drive the full fleet controller (repro.fleet) on a serving
+    substrate — the many-camera analogue of pipeline.run_madeye.
+
+    Builds the episode observation tables once on the host, then runs the
+    whole episode as a single jit'd lax.scan over an [n_cameras, n_cells]
+    fleet. With `mesh`, the fleet axis shards over the mesh `data` axis.
+    Returns (final FleetState, FleetStepOut stacked over steps).
+    """
+    from repro.fleet import (
+        build_episode_tables,
+        fleet_config,
+        fleet_statics,
+        init_fleet,
+        run_fleet_episode,
+        workload_spec,
+    )
+    tables_ep = build_episode_tables(
+        video, workload, tables, budget, trace,
+        approx_miss=approx_miss, acc_table=acc_table, max_steps=max_steps)
+    cfg = fleet_config(video.grid, budget)
+    state = init_fleet(video.grid, n_cameras)
+    return run_fleet_episode(cfg, workload_spec(workload),
+                             fleet_statics(video.grid), state, tables_ep,
+                             mesh=mesh)
 
 
 @partial(jax.jit, static_argnames=("k_send",))

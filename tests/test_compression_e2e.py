@@ -1,4 +1,5 @@
 """Cross-pod compressed gradient reduction, end to end under shard_map."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -47,7 +48,10 @@ def test_crosspod_compressed_allreduce_matches_exact():
                                    atol=0.1)
         print("COMPRESSION_OK")
     """)
+    pypath = os.pathsep.join(
+        p for p in ("src", os.environ.get("PYTHONPATH")) if p)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src"},
-                       cwd="/root/repo", timeout=300)
+                       text=True, env={**os.environ, "PYTHONPATH": pypath},
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=300)
     assert "COMPRESSION_OK" in r.stdout, r.stdout + r.stderr

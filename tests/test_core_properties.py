@@ -1,7 +1,9 @@
 """Hypothesis property tests on MadEye's core invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import search
 from repro.core.grid import (

@@ -28,8 +28,8 @@ def test_collective_bytes_parser():
 
 def test_param_rules_respect_divisibility():
     """A dim that doesn't divide the mesh axis must not be sharded."""
-    from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     tree = {"attn": {"wq": {"w": jax.ShapeDtypeStruct((7, 13), jnp.float32)}}}
     sh = shd.param_shardings(tree, mesh)
     spec = sh["attn"]["wq"]["w"].spec

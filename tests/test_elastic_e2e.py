@@ -1,5 +1,6 @@
 """Elastic re-sharding end to end: checkpoint on one mesh, resume on a
 smaller one (the node-failure path a 1000-node job actually takes)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -41,7 +42,10 @@ def test_checkpoint_resumes_on_smaller_mesh(tmp_path):
         assert out["w"].shape == (8, 4)
         print("ELASTIC_OK")
     """)
+    pypath = os.pathsep.join(
+        p for p in ("src", os.environ.get("PYTHONPATH")) if p)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src"},
-                       cwd="/root/repo", timeout=300)
+                       text=True, env={**os.environ, "PYTHONPATH": pypath},
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=300)
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr

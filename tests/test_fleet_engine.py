@@ -61,13 +61,13 @@ def test_engine_batch_scoring():
 def test_serve_rules_are_valid(monkeypatch):
     """REPRO_SERVE_TP_ONLY / REPRO_SERVE_REPLICATED produce coherent spec
     trees for a real model."""
-    from jax.sharding import AbstractMesh
     from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_abstract_mesh
     from repro.models.transformer import lm_init
     cfg = get_smoke_config("stablelm-3b")
     p_shape = jax.eval_shape(lambda k: lm_init(k, cfg),
                              jax.ShapeDtypeStruct((2,), jnp.uint32))
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
 
     monkeypatch.setenv("REPRO_SERVE_TP_ONLY", "1")
     sh = shd.param_shardings(p_shape, mesh)

@@ -1,0 +1,225 @@
+"""repro.fleet vs the numpy reference controller.
+
+The headline test drives MadEyeController.step and the F=1 fleet step in
+lockstep on the same scene substrate and asserts the controllers make
+identical decisions — explored cells (and their path order), zoom levels,
+and the frames sent to the backend — every timestep. Unit-level tests pin
+the batched shape ops and the MST walk to their core/ counterparts on
+randomized states.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import DEFAULT_GRID, Query, Workload
+from repro.core import search as search_mod
+from repro.core.grid import contiguous
+from repro.core.madeye import MadEyeController
+from repro.core.path import planner_for
+from repro.core.tradeoff import BudgetConfig
+from repro.data import SceneConfig, build_video
+from repro.fleet import (
+    build_episode_tables,
+    fleet_config,
+    fleet_statics,
+    init_fleet,
+    run_fleet_episode,
+    workload_spec,
+)
+from repro.fleet import shape_ops
+from repro.fleet.step import FleetObs, _walk, fleet_step
+from repro.serving import NetworkTrace, detection_tables
+from repro.serving.accuracy import workload_acc_table
+from repro.serving.pipeline import _observation_from_tables
+
+GRID = DEFAULT_GRID
+N = GRID.n_cells
+WORKLOAD = Workload((
+    Query("yolov4", "person", "count"),
+    Query("ssd", "car", "detect"),
+    Query("frcnn", "person", "binary"),
+    Query("tiny-yolov4", "person", "agg_count"),
+))
+BUDGET = BudgetConfig(fps=2.0)
+MISS = 0.12
+
+
+@pytest.fixture(scope="module")
+def substrate():
+    video = build_video(GRID, SceneConfig(fps=15, seed=3), 8.0)
+    tables = detection_tables(video, WORKLOAD)
+    acc = workload_acc_table(video, WORKLOAD, tables)
+    trace = NetworkTrace.fixed(24.0, 20.0, video.n_frames)
+    ep = build_episode_tables(video, WORKLOAD, tables, BUDGET, trace,
+                              approx_miss=MISS, acc_table=acc)
+    return video, tables, acc, trace, ep
+
+
+# ---------------------------------------------------------------------------
+# end-to-end F=1 decision parity
+# ---------------------------------------------------------------------------
+
+def test_f1_step_parity_with_numpy_controller(substrate):
+    video, tables, acc, trace, ep = substrate
+    ctrl = MadEyeController(GRID, WORKLOAD, budget=BUDGET)
+    stride = max(1, int(round(video.fps / BUDGET.fps)))
+    frames = list(range(0, video.n_frames, stride))
+
+    cfg = fleet_config(GRID, BUDGET)
+    spec = workload_spec(WORKLOAD)
+    statics = fleet_statics(GRID)
+    st = init_fleet(GRID, 1)
+
+    for ei, t in enumerate(frames):
+        ctrl.report_network(trace.observed_mbps(t), trace.rtt_s)
+
+        def observe(cells, zooms, _t=t):
+            return [_observation_from_tables(tables, WORKLOAD, GRID, _t, c,
+                                             int(zi), MISS)
+                    for c, zi in zip(cells, zooms)]
+
+        res = ctrl.step(observe)
+        zoom_of = {c: int(z) for c, z in zip(res.explored, res.zooms)}
+        if len(res.explored) > 1:
+            # pipeline.run_madeye's rank-agreement feedback, quantized to
+            # f32 (the ranking precision both controllers share)
+            true_vals = np.asarray(
+                [acc[t, c, zoom_of[c]] for c in res.explored], np.float32)
+            pred32 = np.asarray(res.pred_acc, np.float32)
+            agree = float(res.explored[int(np.argmax(pred32))]
+                          == res.explored[int(np.argmax(true_vals))])
+            ctrl.report_train_acc(0.9 * ctrl.train_acc + 0.1 * agree)
+
+        st, out = fleet_step(cfg, spec, statics, st,
+                             FleetObs(*[x[ei] for x in ep]))
+
+        j_order = [int(x) for x in np.asarray(out.order[0])][
+            : int(out.n_explored[0])]
+        assert j_order == list(res.explored), f"path order @ step {ei}"
+        j_sent = set(np.flatnonzero(np.asarray(out.sent[0])).tolist())
+        assert j_sent == set(res.sent), f"sent set @ step {ei}"
+        zooms = np.asarray(out.zooms[0])
+        assert {c: int(zooms[c]) for c in j_order} == zoom_of, \
+            f"zooms @ step {ei}"
+
+
+def test_fleet_lanes_are_independent_and_identical(substrate):
+    """Identical cameras fed identical observations stay in lockstep —
+    the fleet axis is pure batch, no cross-camera leakage."""
+    _, _, _, _, ep = substrate
+    cfg = fleet_config(GRID, BUDGET)
+    spec = workload_spec(WORKLOAD)
+    statics = fleet_statics(GRID)
+    st = init_fleet(GRID, 5)
+    _, out = run_fleet_episode(cfg, spec, statics, st, ep)
+    explored = np.asarray(out.explored)
+    sent = np.asarray(out.sent)
+    for lane in range(1, 5):
+        np.testing.assert_array_equal(explored[:, lane], explored[:, 0])
+        np.testing.assert_array_equal(sent[:, lane], sent[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# randomized unit parity for the batched shape ops + walk
+# ---------------------------------------------------------------------------
+
+def _random_contiguous_masks(rng, f, max_size):
+    masks = np.zeros((f, N), bool)
+    for i in range(f):
+        size = rng.integers(1, max_size + 1)
+        cur = int(rng.integers(N))
+        masks[i, cur] = True
+        while masks[i].sum() < size:
+            frontier = np.flatnonzero(
+                (GRID.neighbor_mask[masks[i]].any(0)) & ~masks[i])
+            masks[i, rng.choice(frontier)] = True
+    return masks
+
+
+def _random_state(rng, f):
+    masks = _random_contiguous_masks(rng, f, 9)
+    labels = rng.uniform(0.01, 1.0, (f, N)).astype(np.float32)
+    cents = rng.uniform(0.0, [150.0, 75.0], (f, N, 2)).astype(np.float32)
+    has = rng.random((f, N)) < 0.6
+    return masks, labels, cents, has
+
+
+def test_evolve_shape_matches_core_search():
+    rng = np.random.default_rng(7)
+    masks, labels, cents, has = _random_state(rng, 32)
+    cfg = fleet_config(GRID, BUDGET)
+    statics = fleet_statics(GRID)
+    out = np.asarray(shape_ops.evolve_shape(
+        cfg, statics, jnp.asarray(masks), jnp.asarray(labels),
+        jnp.asarray(cents), jnp.asarray(has)))
+    for i in range(masks.shape[0]):
+        ref = search_mod.evolve_shape(GRID, masks[i], labels[i].astype(float),
+                                      cents[i].astype(float), has[i])
+        np.testing.assert_array_equal(out[i], ref, err_msg=f"camera {i}")
+
+
+def test_resize_shape_matches_core_search():
+    rng = np.random.default_rng(11)
+    masks, labels, cents, has = _random_state(rng, 32)
+    targets = rng.integers(1, 13, 32)
+    cfg = fleet_config(GRID, BUDGET)
+    statics = fleet_statics(GRID)
+    out = np.asarray(shape_ops.resize_shape(
+        cfg, statics, jnp.asarray(masks), jnp.asarray(labels),
+        jnp.asarray(cents), jnp.asarray(has), jnp.asarray(targets)))
+    for i in range(masks.shape[0]):
+        ref = search_mod.resize_shape(GRID, masks[i],
+                                      labels[i].astype(float),
+                                      cents[i].astype(float), has[i],
+                                      int(targets[i]))
+        np.testing.assert_array_equal(out[i], ref, err_msg=f"camera {i}")
+        assert contiguous(out[i], GRID)
+
+
+def test_seed_shape_matches_core_search():
+    cfg = fleet_config(GRID, BUDGET)
+    statics = fleet_statics(GRID)
+    sizes = np.arange(1, N + 1)
+    centers = np.arange(N)[: sizes.size]
+    out = np.asarray(shape_ops.seed_shape(
+        statics, cfg, jnp.asarray(sizes), jnp.asarray(centers)))
+    for i, (s, c) in enumerate(zip(sizes, centers)):
+        ref = search_mod.seed_shape(GRID, int(s), int(c))
+        np.testing.assert_array_equal(out[i], ref, err_msg=f"size {s}")
+
+
+def test_walk_matches_path_planner():
+    rng = np.random.default_rng(13)
+    masks = _random_contiguous_masks(rng, 48, 12)
+    starts = rng.integers(0, N, 48).astype(np.int32)
+    statics = fleet_statics(GRID)
+    order, cnt, t_deg = _walk(statics, jnp.asarray(masks),
+                              jnp.asarray(starts))
+    order, cnt, t_deg = (np.asarray(order), np.asarray(cnt),
+                         np.asarray(t_deg))
+    planner = planner_for(GRID)
+    for i in range(masks.shape[0]):
+        ref = planner.subtree_walk(masks[i], int(starts[i]))
+        got = [int(x) for x in order[i][: cnt[i]]]
+        assert got == ref, f"walk {i}"
+        t_ref = planner.path_time(ref, 1.0, from_cell=int(starts[i]))
+        np.testing.assert_allclose(t_deg[i], t_ref, rtol=1e-5)
+
+
+def test_first_removable_matches_shrink_rule():
+    rng = np.random.default_rng(17)
+    masks = _random_contiguous_masks(rng, 32, 10)
+    labels = rng.uniform(0.01, 1.0, (32, N)).astype(np.float32)
+    statics = fleet_statics(GRID)
+    picks = np.asarray(shape_ops.first_removable(
+        jnp.asarray(masks), jnp.asarray(labels), statics.neighbor8))
+    from repro.core.grid import removal_keeps_contiguity
+    for i in range(32):
+        if masks[i].sum() < 2:
+            continue
+        cand = sorted(np.flatnonzero(masks[i]), key=lambda c: labels[i][c])
+        want = next((c for c in cand
+                     if removal_keeps_contiguity(masks[i], int(c), GRID)),
+                    cand[0])
+        assert int(picks[i]) == int(want), f"camera {i}"

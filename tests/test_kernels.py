@@ -10,6 +10,7 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.frame_delta.ops import apply_delta, frame_delta
 from repro.kernels.frame_delta.ref import frame_delta_ref
+from repro.kernels.neighbor_score.ops import geometry_arrays, neighbor_scores
 from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
@@ -107,6 +108,57 @@ def test_match_boxes_one_to_one():
     # only the first (higher-ranked) pred claims the single GT
     assert bool(tp[0]) and not bool(tp[1])
     assert int(m[0]) == 0 and int(m[1]) == -1
+
+
+# ---------------------------------------------------------------------------
+# neighbor score (fleet shape-search inner loop)
+# ---------------------------------------------------------------------------
+
+def _neighbor_inputs(b, seed=0):
+    from repro.core.grid import DEFAULT_GRID
+    rng = np.random.default_rng(seed)
+    n = DEFAULT_GRID.n_cells
+    mask = rng.random((b, n)) < 0.3
+    mask[:, 0] |= ~mask.any(1)                  # at least one member
+    has = rng.random((b, n)) < 0.7
+    cents = rng.uniform(0.0, [150.0, 75.0], (b, n, 2)).astype(np.float32)
+    heads = np.array([rng.choice(np.flatnonzero(m)) for m in mask],
+                     np.int32)
+    geo = geometry_arrays(DEFAULT_GRID)
+    args = (jnp.asarray(mask), jnp.asarray(has), jnp.asarray(cents),
+            jnp.asarray(heads), jnp.asarray(geo["d_center"]),
+            jnp.asarray(geo["overlap"]), jnp.asarray(geo["cell_x"]),
+            jnp.asarray(geo["cell_y"]), jnp.asarray(geo["neighbor8"]))
+    return mask, has, cents, heads, args
+
+
+@pytest.mark.parametrize("b", [1, 7, 64, 130])
+def test_neighbor_score_kernel_matches_ref(b):
+    """Pallas kernel path (padded to lanes) == fused-jnp reference path."""
+    _, _, _, _, args = _neighbor_inputs(b, seed=b)
+    s_ref, cand_ref = neighbor_scores(*args, use_kernel=False)
+    s_ker, cand_ker = neighbor_scores(*args, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(cand_ref),
+                                  np.asarray(cand_ker))
+    np.testing.assert_allclose(np.asarray(s_ker), np.asarray(s_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_neighbor_score_matches_core_neighbor():
+    """Both dispatch paths reproduce core/neighbor.score_candidates."""
+    from repro.core import neighbor as nb
+    from repro.core.grid import DEFAULT_GRID
+    mask, has, cents, heads, args = _neighbor_inputs(16, seed=3)
+    for use_kernel in (False, True):
+        s, cand = neighbor_scores(*args, use_kernel=use_kernel)
+        s, cand = np.asarray(s), np.asarray(cand)
+        for b in range(mask.shape[0]):
+            cands_np, scores_np = nb.score_candidates(
+                DEFAULT_GRID, mask[b], int(heads[b]), cents[b], has[b])
+            assert set(cands_np.tolist()) == \
+                set(np.flatnonzero(cand[b]).tolist())
+            for c, sc in zip(cands_np, scores_np):
+                np.testing.assert_allclose(s[b, c], sc, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -56,7 +56,7 @@ def test_pipeline_matches_sequential_single_stage():
 
 def test_pipeline_matches_sequential_multi_stage():
     """S=4 stages on 4 forced host devices."""
-    import subprocess, sys, textwrap
+    import os, subprocess, sys, textwrap
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -90,7 +90,10 @@ def test_pipeline_matches_sequential_multi_stage():
                                    atol=1e-5)
         print("PIPELINE_OK")
     """)
+    pypath = os.pathsep.join(
+        p for p in ("src", os.environ.get("PYTHONPATH")) if p)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/nix/store"},
-                       cwd="/root/repo", timeout=300)
+                       text=True, env={**os.environ, "PYTHONPATH": pypath},
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=300)
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

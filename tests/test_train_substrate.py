@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.train import checkpoint as ckpt
 from repro.train import compression as comp
