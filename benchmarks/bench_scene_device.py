@@ -1,0 +1,126 @@
+"""Device-resident scene substrate vs host-materialized tables.
+
+The tables-backed episode pays an O(E * N * Z * P) numpy materialization
+(procedural scene -> teacher detections -> EpisodeTables) before the scan
+can start, and every camera shares that one world. The scene-backed
+provider (repro.scene_jax) generates per-camera observations inside the
+jit'd scan — zero host tables, per-camera scene configs and network
+traces. This benchmark runs BOTH paths end-to-end at >= 512 cameras and
+reports substrate-preparation time, steady-state scan throughput, the
+end-to-end speedup (prep + scan) of the device path against ONE shared
+host world, and `hetero_speedup` against what the host path would cost
+for the per-camera worlds the device path actually simulated (one table
+build per camera, extrapolated).
+
+  PYTHONPATH=src python -m benchmarks.bench_scene_device
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+N_CAMERAS = 512
+N_STEPS = 32
+FPS = 3.0
+SEED = 3
+
+
+def _workload():
+    from repro.launch.serve import DEFAULT_WORKLOAD
+    return DEFAULT_WORKLOAD
+
+
+def run(n_cameras: int = N_CAMERAS, n_steps: int = N_STEPS,
+        quick: bool | None = None) -> dict:
+    import jax
+
+    from repro.core import DEFAULT_GRID
+    from repro.core.tradeoff import BudgetConfig
+    from repro.data import SceneConfig, build_video
+    from repro.fleet import (
+        build_episode_tables,
+        fleet_config,
+        fleet_statics,
+        init_fleet,
+        make_scene_provider,
+        run_fleet_episode,
+        workload_spec,
+    )
+    from repro.serving import NetworkTrace, detection_tables
+
+    if quick is None:
+        quick = os.environ.get("BENCH_QUICK", "") == "1"
+    if quick:
+        n_cameras, n_steps = 16, 6
+
+    grid = DEFAULT_GRID
+    wl = _workload()
+    budget = BudgetConfig(fps=FPS)
+    cfg = fleet_config(grid, budget)
+    spec = workload_spec(wl)
+    statics = fleet_statics(grid)
+    stride = max(1, int(round(15 / FPS)))
+
+    # -- host path: numpy scene + teachers -> EpisodeTables, then scan
+    t0 = time.perf_counter()
+    video = build_video(grid, SceneConfig(fps=15, seed=SEED),
+                        (n_steps * stride + 2) / 15.0)
+    tables = detection_tables(video, wl)
+    trace = NetworkTrace.fixed(24.0, 20.0, video.n_frames)
+    ep = build_episode_tables(video, wl, tables, budget, trace,
+                              max_steps=n_steps)
+    host_prep_s = time.perf_counter() - t0
+    state_h = init_fleet(grid, n_cameras)
+    jax.block_until_ready(
+        run_fleet_episode(cfg, spec, statics, state_h, ep))  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_fleet_episode(cfg, spec, statics, state_h, ep))
+    host_scan_s = time.perf_counter() - t0
+
+    # -- device path: per-camera scenes + nets generated inside the scan
+    t0 = time.perf_counter()
+    provider, state_d = make_scene_provider(
+        grid, wl, cfg, n_cameras=n_cameras, n_steps=n_steps, seed=SEED,
+        person_speed=np.linspace(0.8, 2.0, n_cameras),
+        n_people=np.linspace(4, 14, n_cameras).astype(int),
+        mbps=np.full(n_cameras, 24.0), net_seed=SEED)
+    jax.block_until_ready(provider.state0)
+    dev_prep_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        run_fleet_episode(cfg, spec, statics, state_d, provider))  # compile
+    dev_compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, out = jax.block_until_ready(
+        run_fleet_episode(cfg, spec, statics, state_d, provider))
+    dev_scan_s = time.perf_counter() - t0
+
+    cps = n_cameras * n_steps
+    # the host path materialized ONE world shared by every camera; giving
+    # each camera its own scene (what the device path actually ran) costs
+    # the host path n_cameras table builds — extrapolated, not timed
+    host_hetero_s = host_prep_s * n_cameras + host_scan_s
+    return {
+        "cameras": n_cameras,
+        "steps": n_steps,
+        "host_prep_s": float(host_prep_s),
+        "host_scan_s": float(host_scan_s),
+        "host_cps": float(cps / (host_prep_s + host_scan_s)),
+        "dev_prep_s": float(dev_prep_s),
+        "dev_compile_s": float(dev_compile_s),
+        "dev_scan_s": float(dev_scan_s),
+        "dev_cps": float(cps / (dev_prep_s + dev_scan_s)),
+        "e2e_speedup": float((host_prep_s + host_scan_s)
+                             / (dev_prep_s + dev_scan_s)),
+        "hetero_speedup": float(host_hetero_s / (dev_prep_s + dev_scan_s)),
+        "mean_shape": float(np.asarray(out.n_explored, float).mean()),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    for k, v in out.items():
+        print(f"{k:14s} {v:.2f}" if isinstance(v, float) else
+              f"{k:14s} {v}")

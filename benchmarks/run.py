@@ -1,13 +1,21 @@
 """Benchmark driver — one entry per paper table/figure.
 
 Prints a `name,us_per_call,derived` CSV row per benchmark (us_per_call =
-wall time of the benchmark harness; derived = its headline metric).
+wall time of the benchmark harness; derived = its headline metric) and
+writes the same rows to BENCH_repro.json so the perf trajectory is
+machine-readable across PRs.
 
   PYTHONPATH=src python -m benchmarks.run            # quick substrate
   BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
+  BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run   # CI smoke:
+      imports every benchmark module and runs a tiny subset (written to
+      BENCH_repro.quick.json so the committed full-sweep trajectory in
+      BENCH_repro.json is never clobbered by a smoke run)
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
@@ -20,44 +28,64 @@ def main() -> None:
         bench_orientation_gains,
         bench_rank_quality,
         bench_roofline,
+        bench_scene_device,
         bench_scene_stats,
         bench_sota,
     )
 
+    quick = os.environ.get("BENCH_QUICK", "") == "1"
     rows = []
 
     def timed(name, fn, derive):
         t0 = time.perf_counter()
         out = fn()
         dt = (time.perf_counter() - t0) * 1e6
-        rows.append((name, dt, derive(out)))
+        rows.append({"name": name, "us_per_call": dt,
+                     "derived": derive(out)})
         return out
 
-    timed("fig1_2_orientation_gains", bench_orientation_gains.run,
-          lambda o: f"dyn_over_fixed=+{o['dyn_over_fixed']*100:.1f}%")
-    timed("fig3_7_9_10_11_scene_stats", bench_scene_stats.run,
-          lambda o: f"corr1hop={o['corr_1hop']:.2f}")
-    timed("fig12_13_14_e2e_sweeps", bench_e2e_sweeps.run,
-          lambda o: f"fps1_win=+{o['fps1_win']*100:.1f}%")
-    timed("fig15_table2_sota", bench_sota.run,
-          lambda o: f"madeye={o['madeye']:.3f}")
-    timed("table1_fixed_cameras", bench_fixed_cameras.run,
-          lambda o: f"madeye1_reduction={o['madeye1']['reduction']:.1f}x")
-    timed("fig16_rank_quality", bench_rank_quality.run,
-          lambda o: f"median_rank={o['detector_median_rank']:.1f}")
-    timed("sec5_4_deepdive", bench_deepdive.run,
-          lambda o: f"path_us={o['path_us']:.0f}")
-    timed("fleet_scale_controller", bench_fleet_scale.run,
-          lambda o: f"speedup={o['speedup']:.0f}x"
-                    f"@{o['cameras']}x{o['steps']}")
-    timed("roofline_single", lambda: bench_roofline.run("single"),
-          lambda o: f"cells={len(o)}")
-    timed("roofline_multi", lambda: bench_roofline.run("multi"),
-          lambda o: f"cells={len(o)}")
+    if quick:
+        # CI smoke: every module above is imported (so benchmark imports
+        # can't silently rot) but only the cheap device-path entries run
+        timed("scene_device_vs_host_tables",
+              lambda: bench_scene_device.run(quick=True),
+              lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
+                        f"@{o['cameras']}x{o['steps']}")
+    else:
+        timed("fig1_2_orientation_gains", bench_orientation_gains.run,
+              lambda o: f"dyn_over_fixed=+{o['dyn_over_fixed']*100:.1f}%")
+        timed("fig3_7_9_10_11_scene_stats", bench_scene_stats.run,
+              lambda o: f"corr1hop={o['corr_1hop']:.2f}")
+        timed("fig12_13_14_e2e_sweeps", bench_e2e_sweeps.run,
+              lambda o: f"fps1_win=+{o['fps1_win']*100:.1f}%")
+        timed("fig15_table2_sota", bench_sota.run,
+              lambda o: f"madeye={o['madeye']:.3f}")
+        timed("table1_fixed_cameras", bench_fixed_cameras.run,
+              lambda o: f"madeye1_reduction={o['madeye1']['reduction']:.1f}x")
+        timed("fig16_rank_quality", bench_rank_quality.run,
+              lambda o: f"median_rank={o['detector_median_rank']:.1f}")
+        timed("sec5_4_deepdive", bench_deepdive.run,
+              lambda o: f"path_us={o['path_us']:.0f}")
+        timed("fleet_scale_controller", bench_fleet_scale.run,
+              lambda o: f"speedup={o['speedup']:.0f}x"
+                        f"@{o['cameras']}x{o['steps']}")
+        timed("scene_device_vs_host_tables", bench_scene_device.run,
+              lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
+                        f"@{o['cameras']}x{o['steps']}")
+        timed("roofline_single", lambda: bench_roofline.run("single"),
+              lambda o: f"cells={len(o)}")
+        timed("roofline_multi", lambda: bench_roofline.run("multi"),
+              lambda o: f"cells={len(o)}")
 
     print("\nname,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.0f},{derived}")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+    path = os.environ.get(
+        "BENCH_JSON", "BENCH_repro.quick.json" if quick
+        else "BENCH_repro.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"\nwrote {len(rows)} rows to {path}")
 
 
 if __name__ == "__main__":

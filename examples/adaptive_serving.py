@@ -8,7 +8,11 @@ timestep the explored orientations are rendered to images, scored by the
 NN in ONE batch (the TPU-native pattern — serving/engine.py), ranked, and
 the top-k shipped. The detector is first distilled from the yolov4
 teacher for a few steps so its counts are meaningful.
+
+REPRO_EX_DURATION / REPRO_EX_STEPS shrink the scene and the distillation
+phase (the CI smoke test runs this as a subprocess with tiny overrides).
 """
+import os
 import time
 
 import jax
@@ -32,7 +36,8 @@ GRID = DEFAULT_GRID
 RES = 64
 
 
-def distill_detector(cfg, video, tables, key, steps=100):
+def distill_detector(cfg, video, tables, key,
+                     steps=int(os.environ.get("REPRO_EX_STEPS", "100"))):
     """Bootstrap fine-tuning (paper §3.2 initial phase, abbreviated)."""
     params = det.detector_init(key, cfg)
     opt = continual.init_finetune(params)
@@ -67,7 +72,8 @@ def main():
     cfg = get_smoke_config("madeye-approx")
 
     print("building scene...")
-    video = build_video(GRID, SceneConfig(fps=15, seed=13), 8.0)
+    video = build_video(GRID, SceneConfig(fps=15, seed=13),
+                        float(os.environ.get("REPRO_EX_DURATION", "8.0")))
     tables = detection_tables(video, workload)
     acc = workload_acc_table(video, workload, tables)
 

@@ -7,7 +7,13 @@ visiting a drifting hotspot, fresh teacher labels arrive only for visited
 orientations, and the replay buffer pads neighbors (<=3 hops) so the
 student doesn't catastrophically forget the rest of the grid. Compares
 rank quality of balanced vs naive (fresh-only) retraining.
+
+REPRO_EX_DURATION / REPRO_EX_EVALS shrink the scene and the rank-quality
+evaluation (the CI smoke test runs this as a subprocess with tiny
+overrides).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -39,7 +45,8 @@ def make_batch(video, tables, samples, cfg):
             jnp.asarray(np.stack(cls)), jnp.asarray(np.stack(vld)))
 
 
-def rank_quality(params, cfg, video, tables, rng, n_eval=40):
+def rank_quality(params, cfg, video, tables, rng,
+                 n_eval=int(os.environ.get("REPRO_EX_EVALS", "40"))):
     """Spearman correlation between NN counts and teacher counts across
     random orientation sets."""
     from repro.serving.engine import InferenceEngine
@@ -63,7 +70,8 @@ def main():
     cfg = get_smoke_config("madeye-approx")
     workload = Workload((Query("yolov4", "person", "count"),))
     print("building scene...")
-    video = build_video(GRID, SceneConfig(fps=15, seed=21), 10.0)
+    video = build_video(GRID, SceneConfig(fps=15, seed=21),
+                        float(os.environ.get("REPRO_EX_DURATION", "10.0")))
     tables = detection_tables(video, workload)
     rng = np.random.default_rng(0)
 

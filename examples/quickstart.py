@@ -6,7 +6,11 @@ Builds a 15-second scene, registers a 4-query workload (the paper's
 {model, object, task} triples), runs the full MadEye loop at 5 fps over a
 {24 Mbps, 20 ms} link, and prints workload accuracy against the oracle
 fixed/dynamic baselines.
+
+Set REPRO_EX_DURATION to shrink the scene (the CI smoke test runs every
+example as a subprocess with a few-second override).
 """
+import os
 import time
 
 from repro.core import DEFAULT_GRID, Query, Workload
@@ -29,9 +33,10 @@ def main():
         Query("tiny-yolov4", "person", "agg_count"),
     ))
 
+    duration = float(os.environ.get("REPRO_EX_DURATION", "15.0"))
     print("building scene + teacher detection tables...")
     t0 = time.time()
-    video = build_video(DEFAULT_GRID, SceneConfig(fps=15, seed=42), 15.0)
+    video = build_video(DEFAULT_GRID, SceneConfig(fps=15, seed=42), duration)
     tables = detection_tables(video, workload)
     acc = workload_acc_table(video, workload, tables)
     print(f"  done in {time.time()-t0:.1f}s "

@@ -10,8 +10,10 @@ Python call).
                 with static iteration bounds
   step.py       one fleet timestep: budget -> shape -> MST path + shrink
                 -> zoom -> rank -> EWMA update
-  runner.py     lax.scan episode runner over precomputed scene tables,
-                shardable over a mesh `data` axis
+  runner.py     lax.scan episode runner behind an observation-provider
+                seam (host-materialized EpisodeTables or device-resident
+                repro.scene_jax SceneProvider), shardable over a mesh
+                `data` axis
 """
 from repro.fleet.state import (
     FleetConfig,
@@ -26,6 +28,10 @@ from repro.fleet.state import (
 from repro.fleet.step import fleet_step
 from repro.fleet.runner import (
     EpisodeTables,
+    SceneProvider,
     build_episode_tables,
+    fleet_network_traces,
+    make_scene_provider,
+    materialize_scene_tables,
     run_fleet_episode,
 )

@@ -1,17 +1,32 @@
-"""Episode runner: lax.scan over precomputed scene tables.
+"""Episode runner: one jit'd lax.scan behind an observation-provider seam.
 
-The procedural scene (data/scene.py) is numpy and stateful, so the runner
-splits the episode the same way the serving pipeline does: the observation
-substrate — approx-model counts/areas/box geometry for every (frame, cell,
-zoom) plus the oracle accuracy table and network trace — is materialized
-once on the host (`build_episode_tables`, identical inputs to what
-run_madeye feeds MadEyeController), then the whole fleet episode runs as
-ONE jit'd lax.scan over those tables. The fleet axis shards over a mesh
-`data` axis (launch/mesh.py) via `shard_fleet`; the scanned tables are
-replicated (they are a few hundred KB).
+The fleet episode is a scan of `fleet_step` over per-timestep
+observations. Where those observations come from is a *provider* choice,
+dispatched by `run_fleet_episode`:
+
+  * `EpisodeTables` — the host-materialized path (`build_episode_tables`:
+    O(E*N*Z*P) numpy loops over the procedural scene + teacher models,
+    identical inputs to what run_madeye feeds MadEyeController). Kept for
+    decision-parity tests against the numpy controller and for replaying
+    recorded substrates; every camera shares one world and episode length
+    is bounded by host materialization.
+
+  * `SceneProvider` — the device-resident path: per-camera scenes
+    (repro.scene_jax) advance and are observed *inside* the scanned step,
+    so a 512-camera episode with per-camera scene configs and per-camera
+    network traces runs with no per-step host transfers, and episode
+    length / fleet heterogeneity are free of host work. Scene randomness
+    is driven by the per-camera keys threaded through `FleetState.rng`
+    (fold_in(camera_key, frame)), so streams are reproducible and
+    independent of fleet size or shard layout.
+
+The fleet axis shards over a mesh `data` axis (launch/mesh.py) via
+`shard_fleet` in both paths; shared EpisodeTables are replicated (a few
+hundred KB), scene state/params shard with the fleet.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 from typing import NamedTuple
 
@@ -29,10 +44,25 @@ from repro.fleet.state import (
     workload_spec,
 )
 from repro.fleet.step import FleetObs, FleetStepOut, fleet_step
+from repro.scene_jax.observe import (
+    TeacherArrays,
+    grid_windows,
+    observe_all_cells,
+    teacher_arrays,
+)
+from repro.scene_jax.scene import (
+    SceneFleetParams,
+    SceneSpec,
+    SceneState,
+    advance_scene,
+    init_scene,
+    scene_fleet_params,
+)
 
 
 class EpisodeTables(NamedTuple):
-    """Scanned observation substrate; every leaf leads with [E] steps."""
+    """Scanned observation substrate; every leaf leads with [E] steps.
+    mbps/rtt are [E] for a fleet-shared link or [E, F] per camera."""
     counts: jnp.ndarray     # [E, N, Z, P]
     areas: jnp.ndarray      # [E, N, Z, P]
     centroid: jnp.ndarray   # [E, N, Z, 2]
@@ -40,12 +70,32 @@ class EpisodeTables(NamedTuple):
     extent: jnp.ndarray     # [E, N, Z]
     nbox: jnp.ndarray       # [E, N, Z]
     acc_true: jnp.ndarray   # [E, N, Z]
-    mbps: jnp.ndarray       # [E]
-    rtt: jnp.ndarray        # [E]
+    mbps: jnp.ndarray       # [E] or [E, F]
+    rtt: jnp.ndarray        # [E] or [E, F]
 
     @property
     def n_steps(self) -> int:
         return self.counts.shape[0]
+
+
+@dataclass(frozen=True)
+class SceneProvider:
+    """Scene-backed observation provider: everything the scanned step
+    needs to generate FleetObs on device. Build with `make_scene_provider`
+    (which also returns the matching FleetState so the scene keys in
+    `FleetState.rng` line up with the per-camera scene seeds)."""
+    spec: SceneSpec             # static scene layout (jit constant)
+    params: SceneFleetParams    # per-camera arrays [F, ...]
+    teach: TeacherArrays        # per-pair teacher constants
+    state0: SceneState          # initial object state [F, M, ...]
+    windows: jnp.ndarray        # [N * Z, 4] flattened FOV windows
+    mbps: jnp.ndarray           # [E] or [E, F] network trace
+    rtt: jnp.ndarray            # [E] or [E, F]
+    stride: int                 # scene frames per controller step
+
+    @property
+    def n_steps(self) -> int:
+        return self.mbps.shape[0]
 
 
 def build_episode_tables(video, workload: Workload, tables: dict,
@@ -106,8 +156,79 @@ def build_episode_tables(video, workload: Workload, tables: dict,
         rtt=jnp.full(e, float(trace.rtt_s), np.float32))
 
 
-def shard_fleet(state: FleetState, mesh) -> FleetState:
-    """Place the fleet axis of every state leaf on the mesh `data` axis."""
+# ---------------------------------------------------------------------------
+# scene-backed provider construction
+# ---------------------------------------------------------------------------
+
+def fleet_network_traces(n_steps: int, n_cameras: int | None = None, *,
+                         mbps=24.0, rtt_ms=20.0, seed: int | None = None
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-episode network arrays for the scanned step.
+
+    With n_cameras=None returns fleet-shared [E] traces; otherwise
+    [E, F] with `mbps`/`rtt_ms` broadcast per camera. seed=None gives
+    fixed links; an int seed gives every camera its own LTE-ish AR(1)
+    trace with deep fades (transport.ar1_mobile_trace — the same model
+    NetworkTrace.mobile draws from).
+    """
+    from repro.serving.transport import ar1_mobile_trace
+
+    shape = (n_steps,) if n_cameras is None else (n_steps, n_cameras)
+    base = np.broadcast_to(np.asarray(mbps, np.float32), shape[1:])
+    rtt = np.broadcast_to(np.asarray(rtt_ms, np.float32), shape[1:]) / 1e3
+    if seed is None:
+        x = np.broadcast_to(base, shape).astype(np.float32)
+    else:
+        x = ar1_mobile_trace(n_steps, base,
+                             np.random.default_rng(seed)).astype(np.float32)
+    return (jnp.asarray(x),
+            jnp.asarray(np.broadcast_to(rtt, shape).astype(np.float32)))
+
+
+def make_scene_provider(grid, workload: Workload, cfg: FleetConfig, *,
+                        n_cameras: int, n_steps: int,
+                        spec: SceneSpec | None = None, seed: int = 0,
+                        scene_seeds=None, person_speed=1.2, car_speed=10.0,
+                        churn=0.01, n_people=None, n_cars=None,
+                        mbps=24.0, rtt_ms=20.0, net_seed: int | None = None,
+                        seed_size: int = 6
+                        ) -> tuple[SceneProvider, FleetState]:
+    """Build a heterogeneous scene-backed provider + the matching fleet
+    state. Scalar scene arguments broadcast; pass [F] arrays for
+    per-camera heterogeneity (density via n_people/n_cars, dynamics via
+    speeds/churn, world layout via scene_seeds). The returned FleetState
+    carries fold_in(PRNGKey(seed), scene_seeds[f]) in `rng` — the same
+    keys the provider's initial scene state was drawn from."""
+    from repro.fleet.state import init_fleet
+
+    spec = spec or SceneSpec()
+    params, rng = scene_fleet_params(
+        spec, n_cameras, seed=seed, scene_seeds=scene_seeds,
+        person_speed=person_speed, car_speed=car_speed, churn=churn,
+        n_people=n_people, n_cars=n_cars)
+    state0 = init_scene(spec, params, rng)
+    sw = workload_spec(workload)
+    net_mbps, net_rtt = fleet_network_traces(
+        n_steps, None if np.isscalar(mbps) and np.isscalar(rtt_ms)
+        and net_seed is None else n_cameras,
+        mbps=mbps, rtt_ms=rtt_ms, seed=net_seed)
+    provider = SceneProvider(
+        spec=spec, params=params, teach=teacher_arrays(sw.pairs),
+        state0=state0, windows=grid_windows(grid, cfg.zoom_levels),
+        mbps=net_mbps, rtt=net_rtt,
+        stride=max(1, int(round(spec.fps / cfg.fps))))
+    # install the SAME key array the initial scene state was drawn from —
+    # one derivation, so init stream and step stream can't drift apart
+    state = init_fleet(grid, n_cameras, seed_size, rng=rng)
+    return provider, state
+
+
+# ---------------------------------------------------------------------------
+# episodes
+# ---------------------------------------------------------------------------
+
+def shard_fleet(state, mesh):
+    """Place the fleet axis of every pytree leaf on the mesh `data` axis."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     def sh(x):
@@ -129,17 +250,87 @@ def _episode(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
     return jax.lax.scan(body, state, tables)
 
 
+@partial(jax.jit,
+         static_argnames=("cfg", "wl", "spec", "stride", "collect_obs"))
+def _episode_scene(cfg: FleetConfig, wl: WorkloadSpec, spec: SceneSpec,
+                   stride: int, statics: FleetStatics, state: FleetState,
+                   scene0: SceneState, params: SceneFleetParams,
+                   teach: TeacherArrays, windows, mbps, rtt, *,
+                   collect_obs: bool = False):
+    n_zoom = len(cfg.zoom_levels)
+
+    def body(carry, xs):
+        st, sc = carry
+        mbps_t, rtt_t = xs
+        sc = advance_scene(spec, params, st.rng, sc, st.step_idx, stride)
+        o = observe_all_cells(spec, teach, params, sc,
+                              st.step_idx * stride, windows,
+                              task_id=wl.task_id, pair_idx=wl.pair_idx,
+                              n_zoom=n_zoom, cam_salt=st.rng[:, 0])
+        obs = FleetObs(counts=o.counts, areas=o.areas, centroid=o.centroid,
+                       spread=o.spread, extent=o.extent, nbox=o.nbox,
+                       acc_true=o.acc_true, mbps=mbps_t, rtt=rtt_t)
+        st, out = fleet_step(cfg, wl, statics, st, obs)
+        if collect_obs:
+            return (st, sc), (out, jax.tree.map(lambda x: x[0], o))
+        return (st, sc), out
+
+    (state, _), ys = jax.lax.scan(body, (state, scene0), (mbps, rtt))
+    return state, ys
+
+
+def materialize_scene_tables(cfg: FleetConfig, wl: WorkloadSpec,
+                             statics: FleetStatics, state: FleetState,
+                             provider: SceneProvider) -> EpisodeTables:
+    """Host-materialize the observation stream camera 0 of `provider`
+    would see — an EpisodeTables the tables-backed path can scan.
+
+    Deliberately runs the identical full-fleet scene episode program
+    (not an F=1 slice): the recorded floats are then bit-identical to
+    what the in-scan provider feeds fleet_step, which is what the
+    decision-parity tests pin — a differently-shaped program could
+    legally round reductions differently. That costs one episode at full
+    F; for cheap replay tables where bit-exactness doesn't matter, build
+    the provider/state at n_cameras=1 and materialize that instead."""
+    _, (out, o) = _episode_scene(
+        cfg, wl, provider.spec, provider.stride, statics, state,
+        provider.state0, provider.params, provider.teach, provider.windows,
+        provider.mbps, provider.rtt, collect_obs=True)
+    mbps, rtt = provider.mbps, provider.rtt
+    if mbps.ndim == 2:
+        mbps = mbps[:, 0]
+    if rtt.ndim == 2:
+        rtt = rtt[:, 0]
+    return EpisodeTables(counts=o.counts, areas=o.areas,
+                         centroid=o.centroid, spread=o.spread,
+                         extent=o.extent, nbox=o.nbox, acc_true=o.acc_true,
+                         mbps=mbps, rtt=rtt)
+
+
 def run_fleet_episode(cfg: FleetConfig, wl: WorkloadSpec,
                       statics: FleetStatics, state: FleetState,
-                      tables: EpisodeTables, *,
+                      tables: EpisodeTables | SceneProvider, *,
                       mesh=None) -> tuple[FleetState, FleetStepOut]:
     """Run the whole episode in one jit'd scan.
 
+    `tables` selects the observation provider: an `EpisodeTables`
+    (host-materialized, fleet-shared world) or a `SceneProvider`
+    (device-resident per-camera scenes generated inside the scan).
     Returns (final state, FleetStepOut with leaves stacked to [E, F, ...]).
-    With `mesh`, the fleet axis is sharded over the mesh `data` axis first
-    (the scan then runs SPMD across devices, like launch/serve.py's
-    batched inference path).
+    With `mesh`, the fleet axis (state, and scene state/params on the
+    scene path) is sharded over the mesh `data` axis first — the scan
+    then runs SPMD across devices, like launch/serve.py's batched
+    inference path.
     """
     if mesh is not None:
         state = shard_fleet(state, mesh)
+    if isinstance(tables, SceneProvider):
+        p = tables
+        scene0, params = p.state0, p.params
+        if mesh is not None:
+            scene0 = shard_fleet(scene0, mesh)
+            params = shard_fleet(params, mesh)
+        return _episode_scene(cfg, wl, p.spec, p.stride, statics, state,
+                              scene0, params, p.teach, p.windows,
+                              p.mbps, p.rtt)
     return _episode(cfg, wl, statics, state, tables)

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from typing import NamedTuple
@@ -213,15 +214,37 @@ class FleetState(NamedTuple):
     net_samples: jnp.ndarray    # [F, NET_WINDOW] observed mbps
     net_count: jnp.ndarray      # [F] int32 — filled window slots
     rtt: jnp.ndarray            # [F] f32
+    rng: jnp.ndarray            # [F, 2] per-camera jax.random key
 
 
 def init_fleet(grid: OrientationGrid, n_cameras: int,
-               seed_size: int = 6) -> FleetState:
-    """Same initial conditions as MadEyeController.__post_init__."""
+               seed_size: int = 6, *, seed: int = 0,
+               cam_seeds=None, rng=None) -> FleetState:
+    """Same initial conditions as MadEyeController.__post_init__.
+
+    Camera f's PRNG key is fold_in(PRNGKey(seed), cam_seeds[f])
+    (cam_seeds defaults to arange) — derived from the camera's own seed,
+    never from its position in the fleet array, so the stream a camera
+    sees is reproducible and independent of fleet size or shard layout.
+    The controller itself is deterministic; the key drives the
+    scene-backed observation provider (repro.scene_jax). Pass `rng`
+    ([F, 2] keys) to install already-derived camera keys instead —
+    make_scene_provider does, so the keys that spawned the initial scene
+    state and the keys stepping it in-scan are the same array, not two
+    derivations that must stay in sync.
+    """
     if n_cameras < 1:
         raise ValueError(f"n_cameras must be >= 1, got {n_cameras}")
     n = grid.n_cells
     f = n_cameras
+    if rng is None:
+        if cam_seeds is None:
+            cam_seeds = np.arange(f)
+        cam_seeds = jnp.asarray(np.broadcast_to(cam_seeds, (f,)), jnp.int32)
+        rng = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            jax.random.PRNGKey(seed), cam_seeds)
+    elif rng.shape[0] != f:
+        raise ValueError(f"rng has {rng.shape[0]} keys for {f} cameras")
     shape0 = np.asarray(seed_shape(grid, seed_size), bool)
     cur0 = int(np.flatnonzero(shape0)[0])
     z_fn = lambda *s, dtype=jnp.float32: jnp.zeros((f, *s), dtype)
@@ -245,4 +268,5 @@ def init_fleet(grid: OrientationGrid, n_cameras: int,
         net_samples=z_fn(NET_WINDOW),
         net_count=z_fn(dtype=jnp.int32),
         rtt=jnp.full((f,), 0.02, jnp.float32),
+        rng=rng,
     )

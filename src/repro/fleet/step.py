@@ -40,20 +40,23 @@ INF = jnp.inf
 
 
 class FleetObs(NamedTuple):
-    """Per-timestep observation substrate, shared across the fleet.
+    """Per-timestep observation substrate.
 
-    Tables are indexed [n_cells, n_zoom, ...] (the runner precomputes them
-    from the procedural scene + teacher models, exactly what the serving
-    pipeline feeds the numpy controller)."""
-    counts: jnp.ndarray     # [N, Z, P] approx-model count per pair
-    areas: jnp.ndarray      # [N, Z, P] summed box area per pair
-    centroid: jnp.ndarray   # [N, Z, 2] bbox centroid (scene degrees)
-    spread: jnp.ndarray     # [N, Z] mean box dist to centroid
-    extent: jnp.ndarray     # [N, Z] max box side
-    nbox: jnp.ndarray       # [N, Z] box count
-    acc_true: jnp.ndarray   # [N, Z] oracle workload accuracy (feedback)
-    mbps: jnp.ndarray       # [] network sample this step
-    rtt: jnp.ndarray        # []
+    Tables are indexed [n_cells, n_zoom, ...] when the whole fleet shares
+    one world (the host-precomputed EpisodeTables path) or
+    [F, n_cells, n_zoom, ...] when every camera watches its own scene
+    (the device-resident repro.scene_jax provider); the step gathers
+    rank-aware. mbps/rtt are [] for a shared link or [F] for per-camera
+    network traces."""
+    counts: jnp.ndarray     # [(F,) N, Z, P] approx-model count per pair
+    areas: jnp.ndarray      # [(F,) N, Z, P] summed box area per pair
+    centroid: jnp.ndarray   # [(F,) N, Z, 2] bbox centroid (scene degrees)
+    spread: jnp.ndarray     # [(F,) N, Z] box-center spread
+    extent: jnp.ndarray     # [(F,) N, Z] max box side
+    nbox: jnp.ndarray       # [(F,) N, Z] box count
+    acc_true: jnp.ndarray   # [(F,) N, Z] oracle workload accuracy
+    mbps: jnp.ndarray       # [] or [F] network sample this step
+    rtt: jnp.ndarray        # [] or [F]
 
 
 class FleetStepOut(NamedTuple):
@@ -375,15 +378,23 @@ def fleet_step(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
     # 4. zoom per explored cell (driven by last timestep's boxes)
     zoom_idx, zoomed_since = _zoom(cfg, statics, state, explored)
 
-    # 5. observe at (cell, chosen zoom)
+    # 5. observe at (cell, chosen zoom); tables are either fleet-shared
+    # [N, Z, ...] or per-camera [F, N, Z, ...] (the scene-backed provider
+    # generates the latter inside the scan) — rank decides the gather
     cell_ax = jnp.arange(n)[None, :]
-    counts_g = obs.counts[cell_ax, zoom_idx]        # [F, N, P]
-    areas_g = obs.areas[cell_ax, zoom_idx]
-    o_centroid = obs.centroid[cell_ax, zoom_idx]    # [F, N, 2]
-    o_spread = obs.spread[cell_ax, zoom_idx]
-    o_extent = obs.extent[cell_ax, zoom_idx]
-    o_has = obs.nbox[cell_ax, zoom_idx] > 0
-    true_g = obs.acc_true[cell_ax, zoom_idx]        # [F, N]
+
+    def at_zoom(x, trailing=0):
+        if x.ndim == 2 + trailing:                  # shared across fleet
+            return x[cell_ax, zoom_idx]
+        return x[arange_f[:, None], cell_ax, zoom_idx]
+
+    counts_g = at_zoom(obs.counts, 1)               # [F, N, P]
+    areas_g = at_zoom(obs.areas, 1)
+    o_centroid = at_zoom(obs.centroid, 1)           # [F, N, 2]
+    o_spread = at_zoom(obs.spread)
+    o_extent = at_zoom(obs.extent)
+    o_has = at_zoom(obs.nbox) > 0
+    true_g = at_zoom(obs.acc_true)                  # [F, N]
 
     # 6. rank explored orientations by predicted workload accuracy
     visits = state.ewma.seen
@@ -449,7 +460,7 @@ def fleet_step(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
         train_acc=train_acc, pred_var=pred_var,
         saw_objects=saw_objects, step_idx=step_idx,
         last_visit=last_visit, net_samples=samples,
-        net_count=net_count, rtt=rtt)
+        net_count=net_count, rtt=rtt, rng=state.rng)
     out = FleetStepOut(explored=explored, order=order, n_explored=cnt,
                        zooms=zoom_idx, sent=sent, pred_acc=pred,
                        path_time=path_time, k_send=k_send)

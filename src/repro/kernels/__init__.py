@@ -5,6 +5,7 @@
   rmsnorm/          fused RMSNorm
   frame_delta/      tile-based frame delta encoder (MadEye transmission)
   neighbor_score/   fleet-batched candidate-neighbor scoring (shape search)
+  cell_rasterize/   boxes -> cells x zooms aggregation (scene substrate)
 
 Each kernel package ships `<name>.py` (pl.pallas_call + BlockSpec),
 `ops.py` (jit'd public wrapper) and `ref.py` (pure-jnp oracle used by the

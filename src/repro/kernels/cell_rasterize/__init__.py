@@ -1,0 +1,2 @@
+from repro.kernels.cell_rasterize import ops, ref
+from repro.kernels.cell_rasterize.ops import cell_rasterize, window_arrays

@@ -1,0 +1,100 @@
+"""jit'd wrappers: padded dispatch for the boxes -> cells rasterization.
+
+`cell_rasterize` accepts the scene-native layout (per-camera object boxes
++ per-pair detection draws + flattened orientation windows) and returns
+the un-padded aggregates. Like neighbor_score, the pure-jnp reference is
+the default inside fused fleet steps (XLA fuses it into the scan body);
+the Pallas kernel path is for TPU serving where the rasterization batch
+dominates (set REPRO_RASTERIZE_KERNEL=1 or pass use_kernel=True).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cell_rasterize.cell_rasterize import cell_rasterize_batch
+from repro.kernels.cell_rasterize.ref import cell_rasterize_ref
+
+LANES = 128
+SUBLANES = 8
+
+
+def window_arrays(grid, zoom_levels=(1.0, 2.0, 3.0)) -> np.ndarray:
+    """[N * Z, 4] static FOV windows (x0, y0, fw, fh), cell-major —
+    orientation c_flat = cell * Z + zoom_idx, matching the [N, Z] reshape
+    the fleet observation tables use."""
+    rows = []
+    for cell in range(grid.n_cells):
+        cx, cy = grid.centers[cell]
+        for z in zoom_levels:
+            fw, fh = grid.fov(z)
+            rows.append((cx - fw / 2, cy - fh / 2, fw, fh))
+    return np.asarray(rows, np.float32)
+
+
+def cell_rasterize(ox, oy, ow, oh, draw, a0, a1, windows, *,
+                   min_visible: float = 0.25, n_moment: int | None = None,
+                   use_kernel: bool = False, interpret: bool = True,
+                   block_b: int = 8):
+    """ox/oy/ow/oh [B, M]; draw [B, P, M] (2.0 = never detect);
+    a0/a1 [P]; windows [C, 4]. -> (cnt [B, P, C], area [B, P, C],
+    wcx/wcy/wc2/ext [B, C]). Only the first `n_moment` pair channels
+    (default: all) feed the geometry moments/extent — lets a caller stack
+    extra count-only channels (e.g. teacher draws) onto one pass.
+
+    The env override is resolved when this wrapper traces: at top level
+    that is per call, but inside an enclosing jit (the scene episode
+    scan) the branch is baked in at the *enclosing* program's first
+    trace — flip the kernel path via SceneSpec.use_kernel there.
+    """
+    use_kernel = (use_kernel
+                  or os.environ.get("REPRO_RASTERIZE_KERNEL", "") == "1")
+    if n_moment is None:
+        n_moment = a0.shape[0]
+    return _cell_rasterize(ox, oy, ow, oh, draw, a0, a1, windows,
+                           min_visible=min_visible, n_moment=n_moment,
+                           use_kernel=use_kernel, interpret=interpret,
+                           block_b=block_b)
+
+
+def _pad_to(x: jnp.ndarray, sizes: tuple) -> jnp.ndarray:
+    return jnp.pad(x, [(0, s - d) for s, d in zip(sizes, x.shape)])
+
+
+@partial(jax.jit, static_argnames=("min_visible", "n_moment", "use_kernel",
+                                   "interpret", "block_b"))
+def _cell_rasterize(ox, oy, ow, oh, draw, a0, a1, windows, *,
+                    min_visible: float, n_moment: int, use_kernel: bool,
+                    interpret: bool, block_b: int):
+    if not use_kernel:
+        return cell_rasterize_ref(ox, oy, ow, oh, draw, a0, a1, windows,
+                                  min_visible=min_visible,
+                                  n_moment=n_moment)
+    B, M = ox.shape
+    P = a0.shape[0]
+    C = windows.shape[0]
+    if M > LANES or C > LANES:
+        raise ValueError(
+            f"cell_rasterize kernel supports up to {LANES} objects/"
+            f"orientations per tile, got M={M}, C={C}; "
+            "use the reference path")
+    Bp = -(-B // block_b) * block_b
+    Mp, Cp = LANES, LANES
+    Pp = -(-P // SUBLANES) * SUBLANES
+    strips = [_pad_to(x, (Bp, Mp)) for x in (ox, oy, ow, oh)]
+    # padded pairs/objects: draw = 2.0 can never beat a response in [0, 1]
+    drawp = jnp.full((Bp, Pp, Mp), 2.0, jnp.float32)
+    drawp = drawp.at[:B, :P, :M].set(draw.astype(jnp.float32))
+    tpar = jnp.zeros((SUBLANES, Pp), jnp.float32)
+    tpar = tpar.at[0, :P].set(a0).at[1, :P].set(a1)
+    win = jnp.zeros((SUBLANES, Cp), jnp.float32)
+    win = win.at[:4, :C].set(windows.T.astype(jnp.float32))
+    cnt, area, wcx, wcy, wc2, ext = cell_rasterize_batch(
+        *strips, drawp, tpar, win, n_pairs=P, min_visible=min_visible,
+        n_moment=n_moment, block_b=block_b, interpret=interpret)
+    return (cnt[:B, :P, :C], area[:B, :P, :C], wcx[:B, :C], wcy[:B, :C],
+            wc2[:B, :C], ext[:B, :C])

@@ -1,0 +1,80 @@
+"""Pure-jnp oracle for the boxes -> cells x zooms rasterization.
+
+One fleet-observation step turns every camera's [M] object boxes into the
+per-(cell, zoom) aggregates FleetObs consumes. For each object m and FOV
+window c (a flattened cell x zoom orientation):
+
+  * clip the object's extent to the window, compute visibility
+    (clipped area / object area, kept at >= min_visible — data/render
+    .gt_boxes' rule) and the normalized clipped box (nw, nh);
+  * apparent size max(nw, nh) drives per-pair detection through the
+    saturating teacher response x = clip((apparent - a0) / (a1 - a0));
+    an object is detected by pair p when draw[p, m] < x (draws are
+    pre-divided by the teacher's plateau p_max; masked objects carry
+    draw = 2.0 which can never fire);
+  * detected boxes accumulate counts, normalized areas, and the
+    multiplicity-weighted center moments (sum w*cx, sum w*cy,
+    sum w*(cx^2+cy^2)) + max clipped side that the zoom controller's
+    centroid/spread/extent statistics are built from.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cell_rasterize_ref(ox, oy, ow, oh, draw, a0, a1, windows,
+                       *, min_visible: float = 0.25,
+                       n_moment: int | None = None):
+    """ox/oy/ow/oh [B, M] object centers+sizes (scene degrees);
+    draw [B, P, M] normalized detection draws (2.0 = never detect);
+    a0/a1 [P] apparent-size thresholds; windows [C, 4] rows
+    (x0, y0, fw, fh). Only the first `n_moment` pair channels (default:
+    all) feed the geometry moments/extent.
+
+    Returns (cnt [B, P, C], area [B, P, C], wcx [B, C], wcy [B, C],
+    wc2 [B, C], ext [B, C]) — see module docstring for semantics.
+    """
+    x0 = windows[:, 0][None, None, :]           # [1, 1, C]
+    y0 = windows[:, 1][None, None, :]
+    fw = windows[:, 2][None, None, :]
+    fh = windows[:, 3][None, None, :]
+    ox0 = (ox - ow / 2)[..., None]              # [B, M, 1]
+    ox1 = (ox + ow / 2)[..., None]
+    oy0 = (oy - oh / 2)[..., None]
+    oy1 = (oy + oh / 2)[..., None]
+
+    ix0 = jnp.maximum(ox0, x0)
+    ix1 = jnp.minimum(ox1, x0 + fw)
+    iy0 = jnp.maximum(oy0, y0)
+    iy1 = jnp.minimum(oy1, y0 + fh)
+    iw = jnp.maximum(ix1 - ix0, 0.0)            # [B, M, C]
+    ih = jnp.maximum(iy1 - iy0, 0.0)
+    inter = iw * ih
+    area_obj = (ow * oh)[..., None]
+    vis = inter / jnp.maximum(area_obj, 1e-9)
+    visible = vis >= min_visible
+
+    nw = iw / fw
+    nh = ih / fh
+    apparent = jnp.maximum(nw, nh)
+    a_norm = nw * nh
+    ccx = (ix0 + ix1) / 2
+    ccy = (iy0 + iy1) / 2
+
+    x = jnp.clip((apparent[:, None] - a0[None, :, None, None])
+                 / jnp.maximum((a1 - a0)[None, :, None, None], 1e-6),
+                 0.0, 1.0)                      # [B, P, M, C]
+    det = (draw[..., None] < x) & visible[:, None]
+    detf = det.astype(jnp.float32)
+    cnt = jnp.sum(detf, axis=2)                 # [B, P, C]
+    area = jnp.sum(detf * a_norm[:, None], axis=2)
+
+    if n_moment is None:
+        n_moment = detf.shape[1]
+    mult = jnp.sum(detf[:, :n_moment], axis=1)  # [B, M, C]
+    wcx = jnp.sum(mult * ccx, axis=1)           # [B, C]
+    wcy = jnp.sum(mult * ccy, axis=1)
+    wc2 = jnp.sum(mult * (ccx * ccx + ccy * ccy), axis=1)
+    side = jnp.maximum(iw, ih)
+    ext = jnp.max(jnp.where(mult > 0, side, 0.0), axis=1)
+    return cnt, area, wcx, wcy, wc2, ext

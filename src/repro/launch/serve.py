@@ -38,11 +38,13 @@ DEFAULT_WORKLOAD = Workload((
 def serve(fps: float, duration: float, *, seed: int = 3,
           mbps: float = 24.0, rtt_ms: float = 20.0,
           rotation_speed: float = 400.0, pipelined: bool = False,
-          fleet: int = 0,
+          fleet: int = 0, fleet_scene: int = 0,
           grid: OrientationGrid = DEFAULT_GRID,
           workload: Workload = DEFAULT_WORKLOAD):
     if fleet < 0:
         raise SystemExit(f"--fleet must be >= 0, got {fleet}")
+    if fleet_scene < 0:
+        raise SystemExit(f"--fleet-scene must be >= 0, got {fleet_scene}")
     t0 = time.time()
     video = build_video(grid, SceneConfig(fps=15, seed=seed), duration)
     tables = detection_tables(video, workload)
@@ -70,6 +72,28 @@ def serve(fps: float, duration: float, *, seed: int = 3,
               f"({fleet * n_steps / wall:.0f} camera-steps/s, "
               f"mean shape {shapes.mean():.1f}; "
               f"see benchmarks/bench_fleet_scale.py for steady-state)")
+    if fleet_scene:
+        # device-resident heterogeneous fleet: every camera gets its own
+        # scene seed, a spread of densities/speeds, and its own mobile
+        # network trace — observations generated inside the episode scan
+        from repro.serving.engine import run_fleet_scene_controller
+        f = fleet_scene
+        n_steps = max(1, int(duration * fps))
+        rng = np.random.default_rng(seed)
+        t1 = time.time()
+        _, out = run_fleet_scene_controller(
+            grid, workload, budget, n_cameras=f, n_steps=n_steps,
+            seed=seed, scene_seeds=np.arange(f),
+            person_speed=rng.uniform(0.8, 2.0, f),
+            car_speed=rng.uniform(6.0, 14.0, f),
+            n_people=rng.integers(4, 15, f), n_cars=rng.integers(2, 9, f),
+            mbps=np.full(f, mbps), rtt_ms=rtt_ms, net_seed=seed)
+        wall = time.time() - t1
+        shapes = np.asarray(out.n_explored, float)
+        print(f"scene x{f:<5d}: {n_steps} steps in {wall:.2f}s "
+              f"end-to-end incl. jit compile, zero host tables "
+              f"({f * n_steps / wall:.0f} camera-steps/s, "
+              f"mean shape {shapes.mean():.1f}; per-camera scenes+nets)")
     for scheme in ("one_time_fixed", "best_fixed", "best_dynamic",
                    "panoptes", "tracking", "ucb1"):
         r = run_scheme(video, workload, tables, scheme, budget=budget,
@@ -90,10 +114,16 @@ def main():
     ap.add_argument("--fleet", type=int, default=0,
                     help="also run the JAX fleet controller (repro.fleet) "
                          "with this many cameras")
+    ap.add_argument("--fleet-scene", type=int, default=0,
+                    help="also run a heterogeneous fleet on the "
+                         "device-resident scene substrate (repro."
+                         "scene_jax): per-camera scenes + network traces "
+                         "generated inside the episode scan")
     args = ap.parse_args()
     serve(args.fps, args.duration, seed=args.seed, mbps=args.mbps,
           rtt_ms=args.rtt_ms, rotation_speed=args.rotation_speed,
-          pipelined=args.pipelined, fleet=args.fleet)
+          pipelined=args.pipelined, fleet=args.fleet,
+          fleet_scene=args.fleet_scene)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Device-resident scene substrate — the procedural simulator
+(data/scene.py) as pure-JAX fixed-shape dynamics so heterogeneous fleet
+episodes generate their observations *inside* the jit'd episode scan
+instead of scanning host-precomputed tables.
+
+  scene.py    SceneSpec / SceneFleetParams / SceneState pytrees,
+              init_scene + scene_step + advance_scene fleet dynamics
+  observe.py  scene state -> per-(cell, zoom, pair) counts/areas/geometry
+              + oracle accuracy (FleetObs substrate), dispatching the hot
+              boxes -> cells aggregation to kernels/cell_rasterize
+"""
+from repro.scene_jax.scene import (
+    SceneFleetParams,
+    SceneSpec,
+    SceneState,
+    advance_scene,
+    fleet_from_config,
+    init_scene,
+    scene_fleet_params,
+    scene_step,
+)
+from repro.scene_jax.observe import (
+    SceneObs,
+    TeacherArrays,
+    grid_windows,
+    hash01,
+    observe_all_cells,
+    teacher_arrays,
+)

@@ -108,6 +108,35 @@ def run_fleet_controller(video, workload, tables, budget, trace, *,
                              mesh=mesh)
 
 
+def run_fleet_scene_controller(grid, workload, budget, *, n_cameras: int,
+                               n_steps: int, mesh=None, seed: int = 0,
+                               **scene_kwargs):
+    """Drive the fleet controller on the device-resident scene substrate —
+    no host materialization: per-camera scenes (repro.scene_jax) advance
+    and are observed inside the jit'd episode scan, so episode length and
+    fleet heterogeneity cost no host work.
+
+    `scene_kwargs` go to fleet.make_scene_provider (scene_seeds,
+    person_speed, n_people, mbps, net_seed, ... — scalars broadcast, [F]
+    arrays give per-camera heterogeneity). Returns (final FleetState,
+    FleetStepOut stacked over steps).
+    """
+    from repro.fleet import (
+        fleet_config,
+        fleet_statics,
+        make_scene_provider,
+        run_fleet_episode,
+        workload_spec,
+    )
+    cfg = fleet_config(grid, budget)
+    provider, state = make_scene_provider(
+        grid, workload, cfg, n_cameras=n_cameras, n_steps=n_steps,
+        seed=seed, **scene_kwargs)
+    return run_fleet_episode(cfg, workload_spec(workload),
+                             fleet_statics(grid), state, provider,
+                             mesh=mesh)
+
+
 @partial(jax.jit, static_argnames=("k_send",))
 def fleet_step(state: ewma.EWMAState, counts: jnp.ndarray,
                areas: jnp.ndarray, visited: jnp.ndarray, *,

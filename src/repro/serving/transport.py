@@ -12,6 +12,20 @@ from dataclasses import dataclass
 import numpy as np
 
 
+def ar1_mobile_trace(T: int, base, rng: np.random.Generator) -> np.ndarray:
+    """The LTE-ish capacity model shared by `NetworkTrace.mobile` and the
+    fleet's per-camera traces: AR(1) around `base` (scalar or [F]) with
+    1% deep fades, clipped to [1, 2*base]. Returns [T, *base.shape]."""
+    base = np.asarray(base, np.float64)
+    x = np.empty((T,) + base.shape)
+    x[0] = base
+    for t in range(1, T):
+        x[t] = 0.9 * x[t - 1] + 0.1 * base + rng.normal(0, 3.0, base.shape)
+        fade = rng.random(base.shape) < 0.01
+        x[t] = np.where(fade, x[t] * 0.3, x[t])
+    return np.clip(x, 1.0, base * 2)
+
+
 @dataclass
 class NetworkTrace:
     mbps: np.ndarray        # [T] capacity per timestep
@@ -25,14 +39,8 @@ class NetworkTrace:
     def mobile(cls, T: int, base_mbps: float = 24.0, rtt_ms: float = 20.0,
                seed: int = 0) -> "NetworkTrace":
         """LTE-ish trace: AR(1) around base with occasional deep fades."""
-        rng = np.random.default_rng(seed)
-        x = np.zeros(T)
-        x[0] = base_mbps
-        for t in range(1, T):
-            x[t] = 0.9 * x[t - 1] + 0.1 * base_mbps + rng.normal(0, 3.0)
-            if rng.random() < 0.01:
-                x[t] *= 0.3          # fade
-        return cls(np.clip(x, 1.0, base_mbps * 2), rtt_ms / 1e3)
+        x = ar1_mobile_trace(T, base_mbps, np.random.default_rng(seed))
+        return cls(x, rtt_ms / 1e3)
 
     def transfer_time(self, t: int, n_bytes: int) -> float:
         rate = self.mbps[min(t, len(self.mbps) - 1)]

@@ -1,0 +1,43 @@
+"""Examples run end-to-end as subprocesses (tiny env overrides).
+
+The examples are the documented entry points and had zero coverage — an
+API change that broke them (but not the library tests) would ship
+silently. Each runs exactly as a user would invoke it, with the
+REPRO_EX_* override hooks shrinking the scene/training so the whole
+sweep stays CI-sized. Env is inherited so JAX_PLATFORMS=cpu survives
+into the subprocess (no TPU-probe hangs).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXAMPLES = [
+    ("quickstart.py", {"REPRO_EX_DURATION": "2.0"}, "MadEye"),
+    ("adaptive_serving.py",
+     {"REPRO_EX_DURATION": "2.0", "REPRO_EX_STEPS": "3"},
+     "NN-in-the-loop MadEye accuracy"),
+    ("continual_distillation.py",
+     {"REPRO_EX_DURATION": "2.0", "REPRO_EX_EVALS": "4"},
+     "replay: rank quality"),
+]
+
+
+@pytest.mark.parametrize("script,overrides,marker", EXAMPLES,
+                         ids=[e[0] for e in EXAMPLES])
+def test_example_runs(script, overrides, marker):
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.update(overrides)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", script)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, \
+        f"{script} failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+    assert marker in proc.stdout, \
+        f"{script} did not reach its result line:\n{proc.stdout[-2000:]}"

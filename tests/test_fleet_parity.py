@@ -22,8 +22,11 @@ from repro.data import SceneConfig, build_video
 from repro.fleet import (
     build_episode_tables,
     fleet_config,
+    fleet_network_traces,
     fleet_statics,
     init_fleet,
+    make_scene_provider,
+    materialize_scene_tables,
     run_fleet_episode,
     workload_spec,
 )
@@ -118,6 +121,84 @@ def test_fleet_lanes_are_independent_and_identical(substrate):
     for lane in range(1, 5):
         np.testing.assert_array_equal(explored[:, lane], explored[:, 0])
         np.testing.assert_array_equal(sent[:, lane], sent[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# observation-provider seam: scene-backed vs tables-backed decisions
+# ---------------------------------------------------------------------------
+
+DECISION_FIELDS = ("explored", "order", "n_explored", "zooms", "sent",
+                   "k_send")
+
+
+def test_scene_provider_matches_tables_provider():
+    """A homogeneous fleet driven by the device-resident scene provider
+    makes decisions identical, step for step, to the tables-backed path
+    scanning the materialized record of the very same observation stream
+    — the provider seam changes where observations come from, never what
+    the controller does with them."""
+    cfg = fleet_config(GRID, BUDGET)
+    spec = workload_spec(WORKLOAD)
+    statics = fleet_statics(GRID)
+    provider, st0 = make_scene_provider(
+        GRID, WORKLOAD, cfg, n_cameras=3, n_steps=14,
+        scene_seeds=[7, 7, 7])
+    _, out_scene = run_fleet_episode(cfg, spec, statics, st0, provider)
+    tables = materialize_scene_tables(cfg, spec, statics, st0, provider)
+    _, out_tab = run_fleet_episode(cfg, spec, statics, st0, tables)
+    for name in DECISION_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out_scene, name)),
+            np.asarray(getattr(out_tab, name)), err_msg=name)
+    np.testing.assert_allclose(np.asarray(out_scene.pred_acc),
+                               np.asarray(out_tab.pred_acc), atol=1e-6)
+
+
+def test_scene_provider_heterogeneous_end_to_end():
+    """Per-camera scene configs (seed/density/speed) + per-camera network
+    traces run inside one scan; cameras genuinely diverge while identical
+    cameras stay in lockstep."""
+    cfg = fleet_config(GRID, BUDGET)
+    spec = workload_spec(WORKLOAD)
+    statics = fleet_statics(GRID)
+    provider, st0 = make_scene_provider(
+        GRID, WORKLOAD, cfg, n_cameras=4, n_steps=14,
+        scene_seeds=[1, 9, 9, 4], person_speed=[0.8, 1.5, 1.5, 2.2],
+        n_people=[4, 12, 12, 14], n_cars=[2, 6, 6, 8],
+        mbps=[12.0, 24.0, 24.0, 60.0], net_seed=None)
+    _, out = run_fleet_episode(cfg, spec, statics, st0, provider)
+    explored = np.asarray(out.explored)
+    sent = np.asarray(out.sent)
+    # cameras 1 and 2 are configured identically -> lockstep
+    np.testing.assert_array_equal(explored[:, 1], explored[:, 2])
+    np.testing.assert_array_equal(sent[:, 1], sent[:, 2])
+    # camera 0 watches a different world -> decisions diverge
+    assert not np.array_equal(explored[:, 0], explored[:, 1])
+
+
+def test_per_camera_network_traces_drive_budget():
+    """[E, F] traces reach the per-camera budget stage: a starved camera
+    ships fewer frames than a fat-pipe camera on the same scene."""
+    cfg = fleet_config(GRID, BUDGET)
+    spec = workload_spec(WORKLOAD)
+    statics = fleet_statics(GRID)
+    provider, st0 = make_scene_provider(
+        GRID, WORKLOAD, cfg, n_cameras=2, n_steps=16,
+        scene_seeds=[3, 3], mbps=[1.2, 60.0])
+    assert provider.mbps.shape == (16, 2)
+    _, out = run_fleet_episode(cfg, spec, statics, st0, provider)
+    k = np.asarray(out.k_send)
+    assert k[:, 0].sum() < k[:, 1].sum()
+
+
+def test_fleet_network_traces_shapes():
+    m, r = fleet_network_traces(8, mbps=24.0)
+    assert m.shape == (8,) and r.shape == (8,)
+    m, r = fleet_network_traces(8, 5, mbps=np.full(5, 24.0), seed=0)
+    assert m.shape == (8, 5) and r.shape == (8, 5)
+    m = np.asarray(m)
+    assert (m >= 1.0).all() and (m <= 48.0).all()
+    assert not np.allclose(m[:, 0], m[:, 1])    # per-camera streams
 
 
 # ---------------------------------------------------------------------------

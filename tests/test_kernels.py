@@ -6,6 +6,7 @@ import pytest
 
 from repro.kernels.box_iou.ops import box_iou, match_boxes, nms_mask
 from repro.kernels.box_iou.ref import box_iou_ref
+from repro.kernels.cell_rasterize.ops import cell_rasterize, window_arrays
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.frame_delta.ops import apply_delta, frame_delta
@@ -159,6 +160,82 @@ def test_neighbor_score_matches_core_neighbor():
                 set(np.flatnonzero(cand[b]).tolist())
             for c, sc in zip(cands_np, scores_np):
                 np.testing.assert_allclose(s[b, c], sc, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cell rasterize (scene substrate boxes -> cells x zooms)
+# ---------------------------------------------------------------------------
+
+def _rasterize_inputs(b, m, p, seed=0):
+    from repro.core.grid import DEFAULT_GRID
+    rng = np.random.default_rng(seed)
+    ox = rng.uniform(-10, 160, (b, m)).astype(np.float32)
+    oy = rng.uniform(-10, 85, (b, m)).astype(np.float32)
+    ow = rng.uniform(0, 9, (b, m)).astype(np.float32)
+    oh = rng.uniform(0, 9, (b, m)).astype(np.float32)
+    ow[:, -2:] = 0.0                                # "disabled" slots
+    draw = rng.uniform(0, 1.2, (b, p, m)).astype(np.float32)
+    draw[:, :, -1] = 2.0                            # never-detect mask
+    a0 = rng.uniform(0.02, 0.1, p).astype(np.float32)
+    a1 = (a0 + rng.uniform(0.05, 0.2, p)).astype(np.float32)
+    win = jnp.asarray(window_arrays(DEFAULT_GRID))
+    return (ox, oy, ow, oh, draw, a0, a1), \
+        tuple(jnp.asarray(x) for x in (ox, oy, ow, oh, draw, a0, a1)) \
+        + (win,)
+
+
+@pytest.mark.parametrize("b,m,p", [(1, 22, 4), (7, 22, 5), (16, 40, 8),
+                                   (11, 3, 1)])
+@pytest.mark.parametrize("moment_frac", [None, 0.5])
+def test_cell_rasterize_kernel_matches_ref(b, m, p, moment_frac):
+    """Pallas kernel path (padded to tiles) == pure-jnp reference path,
+    including n_moment < P (the stacked student+teacher layout
+    observe_all_cells uses, where only leading channels feed geometry)."""
+    n_moment = None if moment_frac is None else max(1, int(p * moment_frac))
+    _, args = _rasterize_inputs(b, m, p, seed=b * 100 + m)
+    ref = cell_rasterize(*args, use_kernel=False, n_moment=n_moment)
+    ker = cell_rasterize(*args, use_kernel=True, n_moment=n_moment)
+    for name, r, k in zip(("cnt", "area", "wcx", "wcy", "wc2", "ext"),
+                          ref, ker):
+        np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
+    if n_moment is not None and n_moment < p:
+        # gating matters: full-moment geometry must differ somewhere
+        full = cell_rasterize(*args, use_kernel=False)
+        assert any(not np.allclose(np.asarray(a), np.asarray(c))
+                   for a, c in zip(ref[2:], full[2:]))
+
+
+def test_cell_rasterize_ref_matches_gt_boxes():
+    """The reference visibility/clipping rule reproduces data/render
+    .gt_boxes counts and normalized areas for an always-detect teacher."""
+    from repro.core.grid import DEFAULT_GRID
+    from repro.data.render import gt_boxes
+
+    (ox, oy, ow, oh, _, _, _), _ = _rasterize_inputs(3, 22, 1, seed=5)
+    # always detect any visible object: draw = -1 < clip(...) >= 0 needs
+    # apparent > a0, so use a0 = -1 (every visible box passes the ramp)
+    draw = np.full((3, 1, 22), -1.0, np.float32)
+    a0 = np.array([-1.0], np.float32)
+    a1 = np.array([-0.5], np.float32)
+    win = jnp.asarray(window_arrays(DEFAULT_GRID))
+    cnt, area, _, _, _, _ = cell_rasterize(
+        *(jnp.asarray(x) for x in (ox, oy, ow, oh, draw, a0, a1)), win)
+    cnt, area = np.asarray(cnt), np.asarray(area)
+    zooms = (1.0, 2.0, 3.0)
+    for b in range(3):
+        snap = {"pos": np.stack([ox[b], oy[b]], -1),
+                "size": np.stack([ow[b], oh[b]], -1),
+                "kind": np.zeros(22, int), "oid": np.arange(22), "t": 0}
+        for cell in (0, 7, 12, 24):
+            for zi, z in enumerate(zooms):
+                gt = gt_boxes(snap, DEFAULT_GRID, cell, z)
+                c = cell * len(zooms) + zi
+                assert cnt[b, 0, c] == len(gt["boxes"]), (b, cell, zi)
+                np.testing.assert_allclose(
+                    area[b, 0, c],
+                    float((gt["boxes"][:, 2] * gt["boxes"][:, 3]).sum()),
+                    atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
