@@ -1,0 +1,99 @@
+"""In-step approximation model: render+infer cost per camera-step.
+
+The DetectorProvider closes the paper's camera-side loop — every
+candidate (cell, zoom) crop is rasterized from the device scene and
+scored by the distilled detector network *inside* the jit'd episode scan
+(scene_jax.render + models/detector via serving.engine). That buys
+fidelity (the ranking sees actual pixels, §3.4) at the price of N*Z
+renders + forward passes per camera-step. This benchmark runs the
+detector-backed and the oracle (teacher-table rasterizer) scene episodes
+on identical worlds at each fleet size and reports steady-state
+camera-steps/sec for both, the detector path's overhead factor, and the
+marginal render+infer cost per camera-step.
+
+  PYTHONPATH=src python -m benchmarks.bench_detector_step
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+FLEET_SIZES = (64, 256)
+N_STEPS = 4
+FPS = 3.0
+SEED = 3
+
+
+def _workload():
+    from repro.launch.serve import DEFAULT_WORKLOAD
+    return DEFAULT_WORKLOAD
+
+
+def run(fleet_sizes=FLEET_SIZES, n_steps: int = N_STEPS,
+        quick: bool | None = None) -> dict:
+    import jax
+
+    from repro.core import DEFAULT_GRID
+    from repro.core.tradeoff import BudgetConfig
+    from repro.fleet import (
+        fleet_config,
+        fleet_statics,
+        make_detector_provider,
+        run_fleet_episode,
+        workload_spec,
+    )
+
+    if quick is None:
+        quick = os.environ.get("BENCH_QUICK", "") == "1"
+    if quick:
+        fleet_sizes, n_steps = (8,), 3
+
+    grid = DEFAULT_GRID
+    wl = _workload()
+    cfg = fleet_config(grid, BudgetConfig(fps=FPS))
+    spec = workload_spec(wl)
+    statics = fleet_statics(grid)
+
+    out = {"steps": n_steps, "fleets": list(fleet_sizes)}
+    for f in fleet_sizes:
+        kw = dict(n_cameras=f, n_steps=n_steps, seed=SEED,
+                  scene_seeds=np.arange(f),
+                  person_speed=np.linspace(0.8, 2.0, f),
+                  n_people=np.linspace(4, 14, f).astype(int))
+        det_provider, det_state = make_detector_provider(
+            grid, wl, cfg, **kw)
+        oracle_provider = det_provider.scene
+        legs = {}
+        for name, provider, state in (
+                ("det", det_provider, det_state),
+                ("oracle", oracle_provider, det_state)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                run_fleet_episode(cfg, spec, statics, state, provider))
+            compile_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            _, o = jax.block_until_ready(
+                run_fleet_episode(cfg, spec, statics, state, provider))
+            scan_s = time.perf_counter() - t0
+            legs[name] = (compile_s, scan_s, o)
+
+        cps = f * n_steps
+        det_scan, oracle_scan = legs["det"][1], legs["oracle"][1]
+        out[f"det_cps_{f}"] = float(cps / det_scan)
+        out[f"oracle_cps_{f}"] = float(cps / oracle_scan)
+        out[f"det_overhead_{f}"] = float(det_scan / oracle_scan)
+        out[f"render_infer_us_per_camera_step_{f}"] = float(
+            max(det_scan - oracle_scan, 0.0) / cps * 1e6)
+        out[f"det_compile_s_{f}"] = float(legs["det"][0])
+        out[f"mean_shape_{f}"] = float(
+            np.asarray(legs["det"][2].n_explored, float).mean())
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    for k, v in res.items():
+        print(f"{k:36s} {v:.2f}" if isinstance(v, float) else
+              f"{k:36s} {v}")

@@ -2,7 +2,6 @@
 plus the per-task/object win breakdown."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import Query, Workload

@@ -6,7 +6,6 @@ down by task (Fig 2's "wins grow with query specificity").
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import Query, Workload

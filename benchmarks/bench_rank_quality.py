@@ -10,7 +10,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core import rank as rank_mod
 from repro.serving.teachers import approx_observation
 
 

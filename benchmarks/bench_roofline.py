@@ -20,7 +20,6 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
 
 from repro.configs import get_config, get_shape
 

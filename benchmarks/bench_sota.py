@@ -2,7 +2,6 @@
 plus Table 2 (compatibility with Chameleon-style knob tuning)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core.tradeoff import BudgetConfig

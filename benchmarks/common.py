@@ -16,7 +16,7 @@ import numpy as np
 from repro.core import DEFAULT_GRID, Query, Workload
 from repro.data import SceneConfig, build_video
 from repro.serving import detection_tables
-from repro.serving.accuracy import query_acc_table, workload_acc_table
+from repro.serving.accuracy import query_acc_table
 
 GRID = DEFAULT_GRID
 ZOOMS = (1.0, 2.0, 3.0)

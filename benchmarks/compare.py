@@ -1,0 +1,65 @@
+"""Benchmark regression gate: diff two BENCH json files by metric name.
+
+CI runs the quick benchmark suite fresh and compares it against the
+committed baseline (BENCH_repro.quick.json): any metric whose wall time
+grew by more than --max-slowdown fails the job, as does a metric that
+disappeared (coverage regression). Metrics present only in the fresh run
+are reported but pass — that is how a newly-landed benchmark looks
+before its baseline is committed.
+
+  python -m benchmarks.compare BENCH_repro.quick.json fresh.json \
+      --max-slowdown 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(baseline: dict, fresh: dict, max_slowdown: float) -> list:
+    """Returns a list of failure strings (empty = pass)."""
+    failures = []
+    for name, base_us in baseline.items():
+        if name not in fresh:
+            failures.append(f"{name}: missing from fresh run "
+                            f"(baseline {base_us:.0f}us)")
+            continue
+        ratio = fresh[name] / max(base_us, 1e-9)
+        status = "FAIL" if ratio > max_slowdown else "ok"
+        print(f"{status:4s} {name}: {base_us:.0f}us -> {fresh[name]:.0f}us "
+              f"({ratio:.2f}x)")
+        if ratio > max_slowdown:
+            failures.append(f"{name}: {ratio:.2f}x slowdown "
+                            f"(limit {max_slowdown:.2f}x)")
+    for name in fresh.keys() - baseline.keys():
+        print(f"new  {name}: {fresh[name]:.0f}us (no baseline yet)")
+    return failures
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("fresh", help="freshly measured json")
+    ap.add_argument("--max-slowdown", type=float, default=2.0,
+                    help="fail when fresh/baseline exceeds this ratio")
+    args = ap.parse_args(argv)
+    failures = compare(_load(args.baseline), _load(args.fresh),
+                       args.max_slowdown)
+    if failures:
+        print("\nbench regression:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print("\nno bench regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,7 @@ import time
 def main() -> None:
     from benchmarks import (
         bench_deepdive,
+        bench_detector_step,
         bench_e2e_sweeps,
         bench_fixed_cameras,
         bench_fleet_scale,
@@ -51,6 +52,9 @@ def main() -> None:
               lambda: bench_scene_device.run(quick=True),
               lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
                         f"@{o['cameras']}x{o['steps']}")
+        timed("detector_in_step",
+              lambda: bench_detector_step.run(quick=True),
+              lambda o: f"det_cps={o['det_cps_8']:.0f}@8x{o['steps']}")
     else:
         timed("fig1_2_orientation_gains", bench_orientation_gains.run,
               lambda o: f"dyn_over_fixed=+{o['dyn_over_fixed']*100:.1f}%")
@@ -72,6 +76,10 @@ def main() -> None:
         timed("scene_device_vs_host_tables", bench_scene_device.run,
               lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
                         f"@{o['cameras']}x{o['steps']}")
+        timed("detector_in_step", bench_detector_step.run,
+              lambda o: f"det_cps64={o['det_cps_64']:.0f} "
+                        f"det_cps256={o['det_cps_256']:.0f} "
+                        f"overhead={o['det_overhead_256']:.1f}x")
         timed("roofline_single", lambda: bench_roofline.run("single"),
               lambda o: f"cells={len(o)}")
         timed("roofline_multi", lambda: bench_roofline.run("multi"),

@@ -8,11 +8,9 @@ hundred steps of the stablelm-family smoke config on synthetic token
 streams; kill it mid-run and re-run to watch it resume from the last
 atomic checkpoint.
 """
-import shutil
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config

@@ -8,9 +8,8 @@ Every architecture file in this package registers:
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Any, Optional
 
 import jax.numpy as jnp
 

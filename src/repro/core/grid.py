@@ -11,7 +11,7 @@ orientations exhibit substantial content overlap (LPIPS 0.30).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import cached_property
 
 import numpy as np

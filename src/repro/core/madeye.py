@@ -16,7 +16,6 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
-from repro.core import neighbor as nb
 from repro.core import rank as rank_mod
 from repro.core import search, tradeoff, zoom as zoom_mod
 from repro.core.grid import OrientationGrid

@@ -12,11 +12,9 @@ places we take manual control:
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
 
 
 def psum_scatter_grads(grads, axis_name: str):

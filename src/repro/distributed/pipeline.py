@@ -16,7 +16,6 @@ running the layers sequentially (tests/test_pipeline.py asserts this).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

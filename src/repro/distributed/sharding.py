@@ -17,10 +17,8 @@ divisible by the mesh axis size — otherwise it falls back to replication
 from __future__ import annotations
 
 import re
-from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

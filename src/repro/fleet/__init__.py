@@ -11,9 +11,10 @@ Python call).
   step.py       one fleet timestep: budget -> shape -> MST path + shrink
                 -> zoom -> rank -> EWMA update
   runner.py     lax.scan episode runner behind an observation-provider
-                seam (host-materialized EpisodeTables or device-resident
-                repro.scene_jax SceneProvider), shardable over a mesh
-                `data` axis
+                seam (host-materialized EpisodeTables, device-resident
+                repro.scene_jax SceneProvider, or DetectorProvider — the
+                distilled approximation model scoring rendered crops
+                in-step), shardable over a mesh `data` axis
 """
 from repro.fleet.state import (
     FleetConfig,
@@ -27,10 +28,12 @@ from repro.fleet.state import (
 )
 from repro.fleet.step import fleet_step
 from repro.fleet.runner import (
+    DetectorProvider,
     EpisodeTables,
     SceneProvider,
     build_episode_tables,
     fleet_network_traces,
+    make_detector_provider,
     make_scene_provider,
     materialize_scene_tables,
     run_fleet_episode,

@@ -20,9 +20,20 @@ dispatched by `run_fleet_episode`:
     (fold_in(camera_key, frame)), so streams are reproducible and
     independent of fleet size or shard layout.
 
+  * `DetectorProvider` — the scene path with the distilled approximation
+    model in the loop (paper §3.4): every candidate (cell, zoom) crop is
+    *rendered* from the scene (scene_jax.render) and *scored* by the
+    detector network (models/detector via serving.engine) inside the
+    scanned step; the controller ranks on those detections, the oracle
+    teachers only grade what it chose (acc_true). Detector params ride
+    in the scan carry so a future in-scan distillation step can update
+    them; render noise keys fold from the same per-camera keys as the
+    scene, so decisions stay fleet-size/shard independent.
+
 The fleet axis shards over a mesh `data` axis (launch/mesh.py) via
-`shard_fleet` in both paths; shared EpisodeTables are replicated (a few
-hundred KB), scene state/params shard with the fleet.
+`shard_fleet` in all paths; shared EpisodeTables are replicated (a few
+hundred KB), scene state/params shard with the fleet, detector params
+are fleet-shared and replicate.
 """
 from __future__ import annotations
 
@@ -46,16 +57,19 @@ from repro.fleet.state import (
 from repro.fleet.step import FleetObs, FleetStepOut, fleet_step
 from repro.scene_jax.observe import (
     TeacherArrays,
+    detections_obs,
     grid_windows,
     observe_all_cells,
     teacher_arrays,
 )
+from repro.scene_jax.render import render_fleet_crops, render_noise
 from repro.scene_jax.scene import (
     SceneFleetParams,
     SceneSpec,
     SceneState,
     advance_scene,
     init_scene,
+    kind_mask,
     scene_fleet_params,
 )
 
@@ -96,6 +110,25 @@ class SceneProvider:
     @property
     def n_steps(self) -> int:
         return self.mbps.shape[0]
+
+
+@dataclass(frozen=True)
+class DetectorProvider:
+    """Scene-backed provider with the distilled detector in the loop:
+    candidate-orientation crops are rendered and scored by the
+    approximation network inside the scanned step. Build with
+    `make_detector_provider`."""
+    scene: SceneProvider        # world + teachers (oracle feedback)
+    det_cfg: object             # DetectorConfig (hashable, jit-static)
+    det_params: object          # detector pytree (scan carry)
+    thresh: jnp.ndarray         # [P] per-pair score threshold
+    geo_thresh: jnp.ndarray     # [] score floor for zoom geometry
+    noise: jnp.ndarray          # [] render noise scale
+    chunk: int                  # windows per render+infer slab (static)
+
+    @property
+    def n_steps(self) -> int:
+        return self.scene.n_steps
 
 
 def build_episode_tables(video, workload: Workload, tables: dict,
@@ -223,6 +256,57 @@ def make_scene_provider(grid, workload: Workload, cfg: FleetConfig, *,
     return provider, state
 
 
+def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
+                           n_cameras: int, n_steps: int,
+                           det_cfg=None, det_params=None,
+                           det_seed: int = 0, thresh=0.3,
+                           geo_thresh: float = 0.35, noise: float = 0.05,
+                           chunk: int | None = None, **scene_kwargs
+                           ) -> tuple[DetectorProvider, FleetState]:
+    """Scene provider + the distilled detector scored in-step.
+
+    det_cfg defaults to the madeye-approx smoke config (64 px crops — the
+    crop resolution IS det_cfg.img_res); det_params default to a fresh
+    `detector_init(PRNGKey(det_seed))` — pass a distilled checkpoint for
+    a trained camera. `thresh` broadcasts to a per-pair [P] score
+    threshold; the defaults sit inside a fresh (undistilled) detector's
+    score range so the untrained demo still produces scene-dependent
+    counts — raise both toward ~0.5 for a trained checkpoint. `chunk`
+    bounds how many of the N*Z candidate windows are
+    rendered + scored at once inside the step (peak-memory knob; must
+    divide N*Z, default one cell-row of zooms at a time).
+    `scene_kwargs` are make_scene_provider's heterogeneity knobs.
+    """
+    from repro.configs import get_smoke_config
+    from repro.models.detector import detector_init
+
+    if det_cfg is None:
+        det_cfg = get_smoke_config("madeye-approx")
+    if det_params is None:
+        det_params = detector_init(jax.random.PRNGKey(det_seed), det_cfg)
+    scene, state = make_scene_provider(
+        grid, workload, cfg, n_cameras=n_cameras, n_steps=n_steps,
+        **scene_kwargs)
+    n_pairs = len(workload_spec(workload).pairs)
+    c = scene.windows.shape[0]
+    if chunk is None:
+        chunk = len(cfg.zoom_levels) * max(1, cfg.n_pan)
+        while c % chunk != 0:       # odd grids: largest divisor <= default
+            chunk -= 1
+    elif c % chunk != 0:
+        raise ValueError(
+            f"chunk={chunk} must divide the {c} candidate windows "
+            f"(n_cells * n_zoom) — a non-dividing slab would silently "
+            f"fall back to rendering all windows at once")
+    provider = DetectorProvider(
+        scene=scene, det_cfg=det_cfg, det_params=det_params,
+        thresh=jnp.broadcast_to(
+            jnp.asarray(thresh, jnp.float32), (n_pairs,)),
+        geo_thresh=jnp.asarray(geo_thresh, jnp.float32),
+        noise=jnp.asarray(noise, jnp.float32), chunk=chunk)
+    return provider, state
+
+
 # ---------------------------------------------------------------------------
 # episodes
 # ---------------------------------------------------------------------------
@@ -279,6 +363,69 @@ def _episode_scene(cfg: FleetConfig, wl: WorkloadSpec, spec: SceneSpec,
     return state, ys
 
 
+@partial(jax.jit, static_argnames=("cfg", "wl", "spec", "det_cfg",
+                                   "stride", "chunk"))
+def _episode_detector(cfg: FleetConfig, wl: WorkloadSpec, spec: SceneSpec,
+                      det_cfg, stride: int, chunk: int,
+                      statics: FleetStatics, state: FleetState,
+                      scene0: SceneState, params: SceneFleetParams,
+                      teach: TeacherArrays, windows, mbps, rtt,
+                      det_params, thresh, geo_thresh, noise):
+    """The scene episode with the approximation model in the loop: each
+    step renders every candidate (cell, zoom) crop from the live scene
+    and scores it with the detector network — all inside one scan, no
+    per-step host transfers. Detector params are threaded through the
+    scan carry (unchanged for now; an in-scan distillation update slots
+    in there)."""
+    from repro.serving.engine import detector_scores
+
+    n_zoom = len(cfg.zoom_levels)
+    kinds = jnp.asarray(kind_mask(spec))
+    pair_cls = jnp.asarray(wl.pair_cls, jnp.int32)
+    res = det_cfg.img_res
+    c = windows.shape[0]
+    wchunks = windows.reshape(c // chunk, chunk, 4)
+
+    def body(carry, xs):
+        st, sc, dp = carry
+        mbps_t, rtt_t = xs
+        sc = advance_scene(spec, params, st.rng, sc, st.step_idx, stride)
+        frame = st.step_idx * stride
+        # oracle pass: only acc_true survives DCE — the teachers grade
+        # the camera's choices, they no longer feed its ranking
+        o = observe_all_cells(spec, teach, params, sc, frame, windows,
+                              task_id=wl.task_id, pair_idx=wl.pair_idx,
+                              n_zoom=n_zoom, cam_salt=st.rng[:, 0])
+        noise_img = render_noise(st.rng, frame, res) * noise
+
+        def score_chunk(wc):
+            crops = render_fleet_crops(sc.pos, sc.size, kinds, sc.oid, wc,
+                                       res=res,
+                                       min_visible=spec.min_visible,
+                                       noise=noise_img)
+            return jax.vmap(lambda im: detector_scores(dp, det_cfg, im))(
+                crops)
+
+        # slab the N*Z candidate windows so peak memory is
+        # [F, chunk, res, res, 3] instead of all crops at once
+        dets = jax.lax.map(score_chunk, wchunks)
+        dets = jax.tree.map(
+            lambda x: jnp.moveaxis(x, 0, 1).reshape(
+                (x.shape[1], c) + x.shape[3:]), dets)
+        do = detections_obs(dets, windows, pair_cls, thresh, geo_thresh,
+                            o.acc_true, n_zoom=n_zoom)
+        obs = FleetObs(counts=do.counts, areas=do.areas,
+                       centroid=do.centroid, spread=do.spread,
+                       extent=do.extent, nbox=do.nbox,
+                       acc_true=do.acc_true, mbps=mbps_t, rtt=rtt_t)
+        st, out = fleet_step(cfg, wl, statics, st, obs)
+        return (st, sc, dp), out
+
+    (state, _, _), ys = jax.lax.scan(body, (state, scene0, det_params),
+                                     (mbps, rtt))
+    return state, ys
+
+
 def materialize_scene_tables(cfg: FleetConfig, wl: WorkloadSpec,
                              statics: FleetStatics, state: FleetState,
                              provider: SceneProvider) -> EpisodeTables:
@@ -309,21 +456,35 @@ def materialize_scene_tables(cfg: FleetConfig, wl: WorkloadSpec,
 
 def run_fleet_episode(cfg: FleetConfig, wl: WorkloadSpec,
                       statics: FleetStatics, state: FleetState,
-                      tables: EpisodeTables | SceneProvider, *,
+                      tables: EpisodeTables | SceneProvider
+                      | DetectorProvider, *,
                       mesh=None) -> tuple[FleetState, FleetStepOut]:
     """Run the whole episode in one jit'd scan.
 
     `tables` selects the observation provider: an `EpisodeTables`
-    (host-materialized, fleet-shared world) or a `SceneProvider`
-    (device-resident per-camera scenes generated inside the scan).
+    (host-materialized, fleet-shared world), a `SceneProvider`
+    (device-resident per-camera scenes generated inside the scan), or a
+    `DetectorProvider` (scene + rendered crops scored by the distilled
+    detector inside the scan).
     Returns (final state, FleetStepOut with leaves stacked to [E, F, ...]).
     With `mesh`, the fleet axis (state, and scene state/params on the
-    scene path) is sharded over the mesh `data` axis first — the scan
+    scene paths) is sharded over the mesh `data` axis first — the scan
     then runs SPMD across devices, like launch/serve.py's batched
     inference path.
     """
     if mesh is not None:
         state = shard_fleet(state, mesh)
+    if isinstance(tables, DetectorProvider):
+        d, p = tables, tables.scene
+        scene0, params = p.state0, p.params
+        if mesh is not None:
+            scene0 = shard_fleet(scene0, mesh)
+            params = shard_fleet(params, mesh)
+        return _episode_detector(cfg, wl, p.spec, d.det_cfg, p.stride,
+                                 d.chunk, statics, state, scene0, params,
+                                 p.teach, p.windows, p.mbps, p.rtt,
+                                 d.det_params, d.thresh, d.geo_thresh,
+                                 d.noise)
     if isinstance(tables, SceneProvider):
         p = tables
         scene0, params = p.state0, p.params

@@ -112,13 +112,19 @@ def fleet_config(grid: OrientationGrid,
 
 class WorkloadSpec(NamedTuple):
     """Static query layout: queries[q] reads pair column pair_idx[q] of the
-    observation tables and scores with task task_id[q] (index into TASKS)."""
+    observation tables and scores with task task_id[q] (index into TASKS).
+    pair_cls maps each pair to its object class id — the detector-backed
+    provider buckets the shared approximation model's detections into
+    pair columns by predicted class (scene_jax.observe.detections_obs)."""
     pairs: tuple            # ((model, obj), ...) — distinct, table order
     pair_idx: tuple         # [Q] int — query -> pair column
     task_id: tuple          # [Q] int — query -> TASKS index
+    pair_cls: tuple         # [P] int — pair -> object class (PERSON/CAR)
 
 
 def workload_spec(workload: Workload) -> WorkloadSpec:
+    from repro.data.dataset import OBJ_IDS
+
     pairs = []
     for q in workload.queries:
         if (q.model, q.obj) not in pairs:
@@ -128,6 +134,7 @@ def workload_spec(workload: Workload) -> WorkloadSpec:
         pair_idx=tuple(pairs.index((q.model, q.obj))
                        for q in workload.queries),
         task_id=tuple(TASKS.index(q.task) for q in workload.queries),
+        pair_cls=tuple(int(OBJ_IDS[obj]) for _, obj in pairs),
     )
 
 
@@ -247,7 +254,8 @@ def init_fleet(grid: OrientationGrid, n_cameras: int,
         raise ValueError(f"rng has {rng.shape[0]} keys for {f} cameras")
     shape0 = np.asarray(seed_shape(grid, seed_size), bool)
     cur0 = int(np.flatnonzero(shape0)[0])
-    z_fn = lambda *s, dtype=jnp.float32: jnp.zeros((f, *s), dtype)
+    def z_fn(*s, dtype=jnp.float32):
+        return jnp.zeros((f, *s), dtype)
     return FleetState(
         ewma=ewma.EWMAState(z_fn(n), z_fn(n), z_fn(n), z_fn(n)),
         shape=jnp.broadcast_to(jnp.asarray(shape0), (f, n)),

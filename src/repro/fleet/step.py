@@ -47,7 +47,11 @@ class FleetObs(NamedTuple):
     [F, n_cells, n_zoom, ...] when every camera watches its own scene
     (the device-resident repro.scene_jax provider); the step gathers
     rank-aware. mbps/rtt are [] for a shared link or [F] for per-camera
-    network traces."""
+    network traces. counts/areas/geometry may come from the teacher
+    tables, the scene-oracle rasterizer, or the distilled detector's
+    scored crops (DetectorProvider) — the step is provider-agnostic,
+    which is the whole point of the seam: acc_true is always the
+    oracle's grade of the chosen orientation."""
     counts: jnp.ndarray     # [(F,) N, Z, P] approx-model count per pair
     areas: jnp.ndarray      # [(F,) N, Z, P] summed box area per pair
     centroid: jnp.ndarray   # [(F,) N, Z, 2] bbox centroid (scene degrees)

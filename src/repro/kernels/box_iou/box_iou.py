@@ -13,7 +13,6 @@ computes a (block_n, block_m) IoU tile on the VPU. Block sizes default to
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for box IoU + the NMS / matching consumers."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -38,13 +38,16 @@ DEFAULT_WORKLOAD = Workload((
 def serve(fps: float, duration: float, *, seed: int = 3,
           mbps: float = 24.0, rtt_ms: float = 20.0,
           rotation_speed: float = 400.0, pipelined: bool = False,
-          fleet: int = 0, fleet_scene: int = 0,
+          fleet: int = 0, fleet_scene: int = 0, fleet_detector: int = 0,
           grid: OrientationGrid = DEFAULT_GRID,
           workload: Workload = DEFAULT_WORKLOAD):
     if fleet < 0:
         raise SystemExit(f"--fleet must be >= 0, got {fleet}")
     if fleet_scene < 0:
         raise SystemExit(f"--fleet-scene must be >= 0, got {fleet_scene}")
+    if fleet_detector < 0:
+        raise SystemExit(
+            f"--fleet-detector must be >= 0, got {fleet_detector}")
     t0 = time.time()
     video = build_video(grid, SceneConfig(fps=15, seed=seed), duration)
     tables = detection_tables(video, workload)
@@ -94,6 +97,24 @@ def serve(fps: float, duration: float, *, seed: int = 3,
               f"end-to-end incl. jit compile, zero host tables "
               f"({f * n_steps / wall:.0f} camera-steps/s, "
               f"mean shape {shapes.mean():.1f}; per-camera scenes+nets)")
+    if fleet_detector:
+        # the full camera-side pipeline: candidate orientations rendered
+        # from the device scene and scored by the distilled detector
+        # network inside the episode scan — ranking never reads teacher
+        # tables, the oracle only grades the chosen orientation
+        from repro.serving.engine import run_fleet_detector_controller
+        f = fleet_detector
+        n_steps = max(1, int(duration * fps))
+        t1 = time.time()
+        _, out = run_fleet_detector_controller(
+            grid, workload, budget, n_cameras=f, n_steps=n_steps,
+            seed=seed, scene_seeds=np.arange(f))
+        wall = time.time() - t1
+        shapes = np.asarray(out.n_explored, float)
+        print(f"detect x{f:<4d}: {n_steps} steps in {wall:.2f}s "
+              f"end-to-end incl. jit compile, in-scan render+infer "
+              f"({f * n_steps / wall:.0f} camera-steps/s, "
+              f"mean shape {shapes.mean():.1f}; distilled-model ranking)")
     for scheme in ("one_time_fixed", "best_fixed", "best_dynamic",
                    "panoptes", "tracking", "ucb1"):
         r = run_scheme(video, workload, tables, scheme, budget=budget,
@@ -119,11 +140,17 @@ def main():
                          "device-resident scene substrate (repro."
                          "scene_jax): per-camera scenes + network traces "
                          "generated inside the episode scan")
+    ap.add_argument("--fleet-detector", type=int, default=0,
+                    help="also run a fleet with the distilled "
+                         "approximation model in the loop: candidate "
+                         "orientations rendered from the device scene "
+                         "and scored by the detector network inside the "
+                         "episode scan")
     args = ap.parse_args()
     serve(args.fps, args.duration, seed=args.seed, mbps=args.mbps,
           rtt_ms=args.rtt_ms, rotation_speed=args.rotation_speed,
           pipelined=args.pipelined, fleet=args.fleet,
-          fleet_scene=args.fleet_scene)
+          fleet_scene=args.fleet_scene, fleet_detector=args.fleet_detector)
 
 
 if __name__ == "__main__":

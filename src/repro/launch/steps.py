@@ -18,7 +18,6 @@ Conventions per family:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -9,7 +9,6 @@ Shapes follow [batch, seq, heads, head_dim] ("BSHD").
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -26,13 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import DetectorConfig, VisionConfig
 from repro.models import vit
-from repro.models.layers import (
-    Params,
-    conv2d,
-    conv_init,
-    linear,
-    linear_init,
-)
+from repro.models.layers import Params, conv2d, conv_init
 
 
 class Detections(NamedTuple):

@@ -6,7 +6,6 @@ sampler is 50 forwards (per the pool note). `sample_*` wraps the loop in
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

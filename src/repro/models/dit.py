@@ -17,7 +17,6 @@ from repro.models.layers import (
     Params,
     conv2d,
     conv_init,
-    layernorm,
     linear,
     linear_init,
     mlp,

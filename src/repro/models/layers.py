@@ -11,10 +11,9 @@ This keeps sharding fully explicit (each leaf gets a PartitionSpec from
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 import os
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

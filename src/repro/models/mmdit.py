@@ -10,7 +10,6 @@ per the pool's instructions for modality frontends.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

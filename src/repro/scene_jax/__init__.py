@@ -7,7 +7,12 @@ instead of scanning host-precomputed tables.
               init_scene + scene_step + advance_scene fleet dynamics
   observe.py  scene state -> per-(cell, zoom, pair) counts/areas/geometry
               + oracle accuracy (FleetObs substrate), dispatching the hot
-              boxes -> cells aggregation to kernels/cell_rasterize
+              boxes -> cells aggregation to kernels/cell_rasterize; also
+              detections_obs, the distilled-detector analogue of the same
+              tables (models/detector outputs -> FleetObs substrate)
+  render.py   SceneState boxes -> per-orientation image crops, the jnp
+              port of data/render.render_image the in-scan approximation
+              model scores (paper §3.4's camera-side distillation loop)
 """
 from repro.scene_jax.scene import (
     SceneFleetParams,
@@ -22,8 +27,15 @@ from repro.scene_jax.scene import (
 from repro.scene_jax.observe import (
     SceneObs,
     TeacherArrays,
+    detections_obs,
     grid_windows,
     hash01,
     observe_all_cells,
     teacher_arrays,
+)
+from repro.scene_jax.render import (
+    render_background,
+    render_crop,
+    render_fleet_crops,
+    render_noise,
 )

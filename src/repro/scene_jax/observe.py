@@ -32,9 +32,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.data.scene import CAR, PERSON
 from repro.kernels.cell_rasterize.ops import cell_rasterize, window_arrays
 from repro.scene_jax.scene import SceneFleetParams, SceneSpec, SceneState, \
     kind_mask
@@ -113,6 +111,69 @@ class SceneObs(NamedTuple):
 def grid_windows(grid, zoom_levels=(1.0, 2.0, 3.0)) -> jnp.ndarray:
     """Device copy of the flattened (cell x zoom) FOV windows."""
     return jnp.asarray(window_arrays(grid, zoom_levels))
+
+
+def detections_obs(dets, windows: jnp.ndarray, pair_cls: jnp.ndarray,
+                   thresh: jnp.ndarray, geo_thresh: jnp.ndarray,
+                   acc_true: jnp.ndarray, *, n_zoom: int = 3) -> SceneObs:
+    """Distilled-detector outputs -> the same observation tables the
+    oracle pass produces, so `fleet_step` consumes either interchangeably.
+
+    dets: models.detector.Detections with leaves [F, C, K, ...] — one row
+    per (camera, flattened cell x zoom window); windows [C, 4] the
+    matching FOV windows (cell-major, kernels.cell_rasterize
+    .window_arrays layout); pair_cls [P] object class per workload pair;
+    thresh [P] per-pair score threshold (a detection counts for pair p
+    when its score clears thresh[p] AND its argmax class is pair p's
+    object); geo_thresh [] score floor for the zoom-geometry statistics.
+    acc_true [F, N, Z] rides through untouched — backend feedback stays
+    the oracle's judgment of what the camera chose, only the camera-side
+    ranking signal switches to the approximation model (paper §3.4).
+
+    Boxes arrive in normalized image coordinates; geometry converts to
+    scene degrees through the per-window FOV transform (data/render
+    .boxes_to_scene) because the zoom controller compares centroids and
+    spreads against cell centers in degrees. Counts are float32 like the
+    rasterized tables; `spread` is the same one-pass RMS moment.
+    """
+    f, c, k = dets.scores.shape
+    n = c // n_zoom
+    x0 = windows[:, 0][None, :, None]           # [1, C, 1]
+    y0 = windows[:, 1][None, :, None]
+    fw = windows[:, 2][None, :, None]
+    fh = windows[:, 3][None, :, None]
+    deg_x = x0 + dets.boxes[..., 0] * fw        # [F, C, K]
+    deg_y = y0 + dets.boxes[..., 1] * fh
+    w_img, h_img = dets.boxes[..., 2], dets.boxes[..., 3]
+
+    cls_id = jnp.argmax(dets.class_probs, axis=-1)          # [F, C, K]
+    keep_p = ((dets.scores[:, :, None, :] >= thresh[None, None, :, None])
+              & (cls_id[:, :, None, :]
+                 == pair_cls[None, None, :, None]))         # [F, C, P, K]
+    kf = keep_p.astype(jnp.float32)
+    counts = jnp.sum(kf, axis=-1)                           # [F, C, P]
+    areas = jnp.sum(kf * (w_img * h_img)[:, :, None, :], axis=-1)
+
+    geo = (dets.scores >= geo_thresh).astype(jnp.float32)   # [F, C, K]
+    nbox = jnp.sum(geo, axis=-1)                            # [F, C]
+    nb = jnp.maximum(nbox, 1e-9)
+    cx = jnp.sum(geo * deg_x, axis=-1) / nb
+    cy = jnp.sum(geo * deg_y, axis=-1) / nb
+    c2 = jnp.sum(geo * (deg_x * deg_x + deg_y * deg_y), axis=-1) / nb
+    has = nbox > 0
+    centroid = jnp.where(has[..., None], jnp.stack([cx, cy], -1), 0.0)
+    spread = jnp.where(has, jnp.sqrt(jnp.maximum(
+        c2 - cx * cx - cy * cy, 0.0)), 0.0)
+    side = jnp.maximum(w_img * fw, h_img * fh)
+    extent = jnp.max(jnp.where(geo > 0, side, 0.0), axis=-1)
+
+    def to_nz(x):           # [F, C, ...] -> [F, N, Z, ...]
+        return x.reshape((f, n, n_zoom) + x.shape[2:])
+
+    return SceneObs(counts=to_nz(counts), areas=to_nz(areas),
+                    centroid=to_nz(centroid), spread=to_nz(spread),
+                    extent=to_nz(extent),
+                    nbox=to_nz(nbox).astype(jnp.int32), acc_true=acc_true)
 
 
 @partial(jax.jit, static_argnames=("spec", "task_id", "pair_idx", "n_zoom"))

@@ -17,7 +17,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.rank import Query, Workload
+from repro.core.rank import Workload
 from repro.data.dataset import OBJ_IDS, Video
 from repro.serving.teachers import TEACHERS, run_teacher
 

@@ -27,28 +27,49 @@ from repro.core import ewma
 from repro.models import detector as det
 
 
+# Module-level jits, NOT per-engine lambdas: a fresh `jax.jit(lambda ...)`
+# per InferenceEngine (the old __post_init__) meant every engine instance
+# — and every vmap call site with its own static threshold — carried its
+# own compilation cache, so the in-step detector path re-traced per site.
+# Hoisted here the cache keys on (cfg, shapes) alone; score_thresh is a
+# *traced* scalar, so sweeping thresholds never recompiles
+# (tests/test_render_jax.py asserts the cache stays at one entry).
+
+@partial(jax.jit, static_argnames=("cfg",))
+def detector_scores(params, cfg: DetectorConfig,
+                    images: jnp.ndarray) -> det.Detections:
+    """images [B, H, W, 3] -> Detections (static [B, max_boxes, ...])."""
+    return det.detector_forward(params, cfg, images)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def detector_counts_and_areas(params, cfg: DetectorConfig,
+                              images: jnp.ndarray,
+                              score_thresh: jnp.ndarray):
+    """-> (counts [B], areas [B]) for rank.py consumption."""
+    d = det.detector_forward(params, cfg, images)
+    keep = d.scores >= score_thresh
+    counts = jnp.sum(keep, axis=-1)
+    areas = jnp.sum(d.boxes[..., 2] * d.boxes[..., 3] * keep, axis=-1)
+    return counts, areas
+
+
 @dataclass
 class InferenceEngine:
     """jit'd detector inference over orientation batches."""
     cfg: DetectorConfig
     params: dict
 
-    def __post_init__(self):
-        self._fwd = jax.jit(
-            lambda p, x: det.detector_forward(p, self.cfg, x))
-
     def score_batch(self, images: jnp.ndarray) -> det.Detections:
         """images [B, H, W, 3] -> Detections (static [B, max_boxes, ...])."""
-        return self._fwd(self.params, images)
+        return detector_scores(self.params, self.cfg, images)
 
     def counts_and_areas(self, images: jnp.ndarray, *,
                          score_thresh: float = 0.5):
         """-> (counts [B], areas [B]) for rank.py consumption."""
-        d = self.score_batch(images)
-        keep = d.scores >= score_thresh
-        counts = jnp.sum(keep, axis=-1)
-        areas = jnp.sum(d.boxes[..., 2] * d.boxes[..., 3] * keep, axis=-1)
-        return counts, areas
+        return detector_counts_and_areas(
+            self.params, self.cfg, images,
+            jnp.asarray(score_thresh, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +153,42 @@ def run_fleet_scene_controller(grid, workload, budget, *, n_cameras: int,
     provider, state = make_scene_provider(
         grid, workload, cfg, n_cameras=n_cameras, n_steps=n_steps,
         seed=seed, **scene_kwargs)
+    return run_fleet_episode(cfg, workload_spec(workload),
+                             fleet_statics(grid), state, provider,
+                             mesh=mesh)
+
+
+def run_fleet_detector_controller(grid, workload, budget, *,
+                                  n_cameras: int, n_steps: int, mesh=None,
+                                  seed: int = 0, det_cfg=None,
+                                  det_params=None, **scene_kwargs):
+    """Drive the fleet controller with the distilled approximation model
+    in the loop — the paper's full camera-side pipeline (§3.4): every
+    candidate orientation is *rendered* from the device-resident scene
+    and *scored* by the detector network (models/detector) inside the
+    jit'd episode scan; the controller ranks on those detections instead
+    of precomputed teacher tables. Oracle accuracy still comes from the
+    scene teachers, as backend feedback.
+
+    det_cfg defaults to the madeye-approx smoke config (64 px crops);
+    det_params are initialized from `seed` when not given — pass a
+    distilled checkpoint for a trained camera. `scene_kwargs` go to
+    fleet.make_detector_provider (same scene/network heterogeneity knobs
+    as the scene controller). Returns (final FleetState, FleetStepOut
+    stacked over steps).
+    """
+    from repro.fleet import (
+        fleet_config,
+        fleet_statics,
+        make_detector_provider,
+        run_fleet_episode,
+        workload_spec,
+    )
+    cfg = fleet_config(grid, budget)
+    scene_kwargs.setdefault("det_seed", seed)
+    provider, state = make_detector_provider(
+        grid, workload, cfg, n_cameras=n_cameras, n_steps=n_steps,
+        seed=seed, det_cfg=det_cfg, det_params=det_params, **scene_kwargs)
     return run_fleet_episode(cfg, workload_spec(workload),
                              fleet_statics(grid), state, provider,
                              mesh=mesh)

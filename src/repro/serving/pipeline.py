@@ -11,12 +11,11 @@ rank-agreement (training accuracy) back to the controller.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import baselines as bl
-from repro.core.grid import OrientationGrid
 from repro.core.madeye import MadEyeController, Observation
 from repro.core.rank import Workload
 from repro.core.tradeoff import BudgetConfig

@@ -24,7 +24,6 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.data.scene import CAR, PERSON
 
 
 def _hash01(*keys) -> float:

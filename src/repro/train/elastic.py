@@ -10,8 +10,7 @@ minimal collective/DMA schedule.
 from __future__ import annotations
 
 import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 
 def reshard(tree, shardings_tree):

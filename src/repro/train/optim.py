@@ -163,8 +163,10 @@ def adafactor_update(params: Params, grads: Params, state: AdafactorState,
         return (p.astype(jnp.float32) - lr * update).astype(p.dtype), vr, vc, v
 
     out = jax.tree.map(upd, params, grads, state.vr, state.vc, state.v)
-    pick = lambda i: jax.tree.map(lambda t: t[i], out,
-                                  is_leaf=lambda t: isinstance(t, tuple))
+    def pick(i):
+        return jax.tree.map(lambda t: t[i], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+
     return pick(0), AdafactorState(step, pick(1), pick(2), pick(3))
 
 

@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import search
 from repro.core.grid import (
     DEFAULT_GRID,
-    OrientationGrid,
     contiguous,
     removal_keeps_contiguity,
 )

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.distributed import sharding as shd
@@ -80,7 +79,7 @@ def test_cell_builder_constructs_all_assigned():
 
 def test_ring_reduce_attend_matches_full_attention():
     """Flash-decode combine (single shard == exact attention)."""
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     from repro.distributed.collectives import ring_reduce_attend
     import math

@@ -2,11 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.pipeline import (
     make_pipelined_forward,
-    pipeline_forward,
     split_stages,
 )
 from repro.launch.mesh import make_debug_mesh
@@ -56,7 +54,10 @@ def test_pipeline_matches_sequential_single_stage():
 
 def test_pipeline_matches_sequential_multi_stage():
     """S=4 stages on 4 forced host devices."""
-    import os, subprocess, sys, textwrap
+    import os
+    import subprocess
+    import sys
+    import textwrap
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -1,0 +1,197 @@
+"""In-step approximation model: renderer parity + detector-provider
+determinism + compile-once inference.
+
+Three contracts pin the camera-side distillation loop (paper §3.4):
+
+  * the jnp rasterizer (scene_jax.render) is pixel-identical to the host
+    renderer `data/render.render_image` at noise=0 — same visibility
+    rule, pixel rounding, painter order, and oid shading — so the
+    detector scores the same images in-scan that the host pipeline and
+    the distillation trainer render;
+  * `DetectorProvider` decisions derive only from per-camera keys
+    (fold_in(camera_key, frame), the SceneProvider discipline), so a
+    camera's episode is bit-identical regardless of fleet size;
+  * the hoisted `detector_counts_and_areas` jit treats the score
+    threshold as a traced scalar — sweeping thresholds (or calling under
+    vmap) never recompiles.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DEFAULT_GRID, Query, Workload
+from repro.core.tradeoff import BudgetConfig
+from repro.data.render import render_image
+from repro.fleet import (
+    fleet_config,
+    fleet_statics,
+    make_detector_provider,
+    run_fleet_episode,
+    workload_spec,
+)
+from repro.kernels.cell_rasterize.ops import window_arrays
+from repro.scene_jax import (
+    SceneSpec,
+    advance_scene,
+    init_scene,
+    render_crop,
+    render_fleet_crops,
+    render_noise,
+    scene_fleet_params,
+)
+from repro.scene_jax.scene import kind_mask
+
+GRID = DEFAULT_GRID
+WORKLOAD = Workload((
+    Query("yolov4", "person", "count"),
+    Query("ssd", "car", "detect"),
+    Query("frcnn", "person", "binary"),
+    Query("tiny-yolov4", "person", "agg_count"),
+))
+BUDGET = BudgetConfig(fps=2.0)
+ZOOMS = (1.0, 2.0, 3.0)
+
+
+def _scene_and_snapshot(seed: int, frames: int = 7):
+    """One camera's SceneState plus the numpy-renderer view of it."""
+    spec = SceneSpec()
+    params, rng = scene_fleet_params(spec, 1, scene_seeds=[seed])
+    st = init_scene(spec, params, rng)
+    st = advance_scene(spec, params, rng, st, jnp.zeros(1, jnp.int32),
+                       frames)
+    kinds = np.asarray(kind_mask(spec))
+    snap = {"pos": np.asarray(st.pos[0], np.float64),
+            "size": np.asarray(st.size[0], np.float64),
+            "kind": kinds,
+            "oid": np.asarray(st.oid[0], np.int64),
+            "t": 0}
+    return spec, st, kinds, snap
+
+
+# ---------------------------------------------------------------------------
+# jnp renderer vs data/render.render_image
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [5, 11])
+def test_render_crop_pixel_parity(seed):
+    """Every (cell, zoom) crop matches the host renderer to float32
+    rounding on a live scene — geometry, visibility cut, paint order,
+    class colors and oid shades all agree."""
+    _, st, kinds, snap = _scene_and_snapshot(seed)
+    wins = window_arrays(GRID, ZOOMS)
+    for cell in (0, 3, 7, 12, 18, 24):
+        for zi, z in enumerate(ZOOMS):
+            ref = render_image(snap, GRID, cell, z, res=64, noise=0.0)
+            got = np.asarray(render_crop(
+                st.pos[0], st.size[0], jnp.asarray(kinds), st.oid[0],
+                jnp.asarray(wins[cell * len(ZOOMS) + zi])))
+            np.testing.assert_allclose(got, ref, atol=1e-6,
+                                       err_msg=f"cell {cell} zoom {z}")
+
+
+def test_render_parity_scene_has_objects():
+    """The parity scenes actually paint boxes (a blank-background match
+    would be vacuous) and crops land in [0, 1]."""
+    _, st, kinds, snap = _scene_and_snapshot(5)
+    wins = window_arrays(GRID, ZOOMS)
+    crops = np.asarray(render_fleet_crops(
+        st.pos, st.size, jnp.asarray(kinds), st.oid, jnp.asarray(wins),
+        res=64))
+    assert crops.shape == (1, wins.shape[0], 64, 64, 3)
+    assert crops.min() >= 0.0 and crops.max() <= 1.0
+    bg = np.asarray(render_fleet_crops(
+        st.pos + 1e6, st.size, jnp.asarray(kinds), st.oid,
+        jnp.asarray(wins), res=64))
+    painted = np.abs(crops - bg) > 1e-6
+    assert painted.any(), "no object pixels rendered anywhere"
+
+
+def test_render_noise_is_per_camera_and_salted():
+    """Noise folds from the camera key: same key -> same image, distinct
+    cameras/frames -> distinct images; stream is fleet-size independent."""
+    spec = SceneSpec()
+    _, rng3 = scene_fleet_params(spec, 3, scene_seeds=[5, 9, 5])
+    _, rng1 = scene_fleet_params(spec, 1, scene_seeds=[5])
+    n3 = np.asarray(render_noise(rng3, jnp.full(3, 4, jnp.int32), 16))
+    n1 = np.asarray(render_noise(rng1, jnp.full(1, 4, jnp.int32), 16))
+    np.testing.assert_array_equal(n3[0], n3[2])      # same camera seed
+    np.testing.assert_array_equal(n3[0], n1[0])      # fleet-size invariant
+    assert not np.array_equal(n3[0], n3[1])          # cameras decorrelated
+    n3b = np.asarray(render_noise(rng3, jnp.full(3, 5, jnp.int32), 16))
+    assert not np.array_equal(n3[0], n3b[0])         # frames decorrelated
+
+
+# ---------------------------------------------------------------------------
+# DetectorProvider: fleet-scan determinism across fleet sizes
+# ---------------------------------------------------------------------------
+
+DECISION_FIELDS = ("explored", "order", "n_explored", "zooms", "sent",
+                   "k_send")
+
+
+def test_detector_provider_deterministic_across_fleet_sizes():
+    """Camera decisions under the in-scan render+infer provider depend
+    only on (seed, scene_seed) — the same camera embedded in a 1-fleet
+    and a 3-fleet produces the identical episode, identically-seeded
+    cameras stay in lockstep, and differently-seeded cameras diverge."""
+    cfg = fleet_config(GRID, BUDGET)
+    spec = workload_spec(WORKLOAD)
+    statics = fleet_statics(GRID)
+
+    p3, st3 = make_detector_provider(GRID, WORKLOAD, cfg, n_cameras=3,
+                                     n_steps=6, scene_seeds=[5, 9, 5])
+    _, out3 = run_fleet_episode(cfg, spec, statics, st3, p3)
+    p1, st1 = make_detector_provider(GRID, WORKLOAD, cfg, n_cameras=1,
+                                     n_steps=6, scene_seeds=[5])
+    _, out1 = run_fleet_episode(cfg, spec, statics, st1, p1)
+
+    for name in DECISION_FIELDS:
+        a3 = np.asarray(getattr(out3, name))
+        a1 = np.asarray(getattr(out1, name))
+        np.testing.assert_array_equal(a3[:, 0], a3[:, 2],
+                                      err_msg=f"{name}: lockstep")
+        np.testing.assert_array_equal(a3[:, 0], a1[:, 0],
+                                      err_msg=f"{name}: fleet size")
+    np.testing.assert_allclose(np.asarray(out3.pred_acc)[:, 0],
+                               np.asarray(out1.pred_acc)[:, 0], atol=1e-6)
+    assert not np.array_equal(np.asarray(out3.explored)[:, 0],
+                              np.asarray(out3.explored)[:, 1])
+    # the detector actually fired: predictions are not uniformly zero
+    assert float(np.asarray(out3.pred_acc).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# hoisted engine jit: threshold sweeps never recompile
+# ---------------------------------------------------------------------------
+
+def test_counts_and_areas_compiles_once_across_thresholds():
+    from repro.configs import get_smoke_config
+    from repro.models.detector import detector_init
+    from repro.serving import engine
+
+    cfg = get_smoke_config("madeye-approx")
+    params = detector_init(jax.random.PRNGKey(0), cfg)
+    eng = engine.InferenceEngine(cfg, params)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1),
+                              (4, cfg.img_res, cfg.img_res, 3))
+    c_all, _ = eng.counts_and_areas(imgs, score_thresh=0.0)
+    assert int(jnp.sum(c_all)) == 4 * cfg.max_boxes
+    size = engine.detector_counts_and_areas._cache_size()
+    c_hi, a_hi = eng.counts_and_areas(imgs, score_thresh=0.99)
+    assert engine.detector_counts_and_areas._cache_size() == size, \
+        "score_thresh must be traced, not a retrace key"
+    assert int(jnp.sum(c_hi)) <= int(jnp.sum(c_all))
+
+    # the in-step path: vmapped over a fleet axis, thresholds still free
+    fleet = jax.random.uniform(jax.random.PRNGKey(2),
+                               (3, 4, cfg.img_res, cfg.img_res, 3))
+    vm = jax.vmap(
+        lambda im, t: engine.detector_counts_and_areas(params, cfg, im, t),
+        in_axes=(0, None))
+    vm(fleet, jnp.float32(0.2))
+    size = engine.detector_counts_and_areas._cache_size()
+    counts, _ = vm(fleet, jnp.float32(0.7))
+    assert engine.detector_counts_and_areas._cache_size() == size
+    assert counts.shape == (3, 4)
