@@ -37,13 +37,7 @@ def run(fleet_sizes=FLEET_SIZES, n_steps: int = N_STEPS,
 
     from repro.core import DEFAULT_GRID
     from repro.core.tradeoff import BudgetConfig
-    from repro.fleet import (
-        fleet_config,
-        fleet_statics,
-        make_detector_provider,
-        run_fleet_episode,
-        workload_spec,
-    )
+    from repro.fleet import FleetRunSpec, prepare_fleet_run
 
     if quick is None:
         quick = os.environ.get("BENCH_QUICK", "") == "1"
@@ -52,30 +46,26 @@ def run(fleet_sizes=FLEET_SIZES, n_steps: int = N_STEPS,
 
     grid = DEFAULT_GRID
     wl = _workload()
-    cfg = fleet_config(grid, BudgetConfig(fps=FPS))
-    spec = workload_spec(wl)
-    statics = fleet_statics(grid)
+    budget = BudgetConfig(fps=FPS)
 
     out = {"steps": n_steps, "fleets": list(fleet_sizes)}
     for f in fleet_sizes:
-        kw = dict(n_cameras=f, n_steps=n_steps, seed=SEED,
-                  scene_seeds=np.arange(f),
-                  person_speed=np.linspace(0.8, 2.0, f),
-                  n_people=np.linspace(4, 14, f).astype(int))
-        det_provider, det_state = make_detector_provider(
-            grid, wl, cfg, **kw)
-        oracle_provider = det_provider.scene
+        prep = prepare_fleet_run(FleetRunSpec.from_objects(
+            "detector", n_cameras=f, n_steps=n_steps, seed=SEED,
+            grid=grid, workload=wl, budget=budget,
+            scene_seeds=np.arange(f),
+            person_speed=np.linspace(0.8, 2.0, f),
+            n_people=np.linspace(4, 14, f).astype(int)))
         legs = {}
-        for name, provider, state in (
-                ("det", det_provider, det_state),
-                ("oracle", oracle_provider, det_state)):
+        # the oracle leg reuses the detector provider's own scene — the
+        # identical world, minus the in-scan render+infer
+        for name, provider in (("det", prep.provider),
+                               ("oracle", prep.provider.scene)):
             t0 = time.perf_counter()
-            jax.block_until_ready(
-                run_fleet_episode(cfg, spec, statics, state, provider))
+            jax.block_until_ready(prep.episode(provider=provider))
             compile_s = time.perf_counter() - t0
             t0 = time.perf_counter()
-            _, o = jax.block_until_ready(
-                run_fleet_episode(cfg, spec, statics, state, provider))
+            _, o = jax.block_until_ready(prep.episode(provider=provider))
             scan_s = time.perf_counter() - t0
             legs[name] = (compile_s, scan_s, o)
 

@@ -38,14 +38,7 @@ def run(n_cameras: int = N_CAMERAS, n_steps: int = N_STEPS) -> dict:
     from repro.core.madeye import MadEyeController
     from repro.core.tradeoff import BudgetConfig
     from repro.data import SceneConfig, build_video
-    from repro.fleet import (
-        build_episode_tables,
-        fleet_config,
-        fleet_statics,
-        init_fleet,
-        run_fleet_episode,
-        workload_spec,
-    )
+    from repro.fleet import FleetRunSpec, prepare_fleet_run
     from repro.serving import NetworkTrace, detection_tables
     from repro.serving.accuracy import workload_acc_table
     from repro.serving.pipeline import _observation_from_tables
@@ -76,31 +69,31 @@ def run(n_cameras: int = N_CAMERAS, n_steps: int = N_STEPS) -> dict:
         ctrl.step(observe)
     numpy_cps = len(frames) / (time.perf_counter() - t0)
 
-    # -- fleet: episode tables once, then one jit'd scan for all cameras
-    t0 = time.perf_counter()
-    ep = build_episode_tables(video, wl, tables, budget, trace,
-                              approx_miss=MISS, acc_table=acc,
-                              max_steps=n_steps)
-    table_build_s = time.perf_counter() - t0
-    cfg = fleet_config(grid, budget)
-    spec = workload_spec(wl)
-    statics = fleet_statics(grid)
-    state = init_fleet(grid, n_cameras)
+    # -- fleet: one declarative spec through the unified API (the tables
+    #    provider materializes the episode once, then ONE jit'd scan
+    #    steps all cameras); prepare/episode split so compile and
+    #    steady-state are timed separately
+    spec = FleetRunSpec.from_objects(
+        "tables", n_cameras=n_cameras, n_steps=n_steps, seed=SEED,
+        grid=grid, workload=wl, budget=budget,
+        video=video, tables=tables, trace=trace, acc_table=acc,
+        approx_miss=MISS)
+    prep = prepare_fleet_run(spec)
+    table_build_s = prep.build_s
 
     t0 = time.perf_counter()
-    jax.block_until_ready(run_fleet_episode(cfg, spec, statics, state, ep))
+    jax.block_until_ready(prep.episode())
     compile_s = time.perf_counter() - t0
     best = np.inf
     for _ in range(3):
         t0 = time.perf_counter()
-        _, out = jax.block_until_ready(
-            run_fleet_episode(cfg, spec, statics, state, ep))
+        _, out = jax.block_until_ready(prep.episode())
         best = min(best, time.perf_counter() - t0)
-    fleet_cps = n_cameras * ep.n_steps / best
+    fleet_cps = n_cameras * prep.provider.n_steps / best
 
     return {
         "cameras": n_cameras,
-        "steps": int(ep.n_steps),
+        "steps": int(prep.provider.n_steps),
         "numpy_cps": float(numpy_cps),
         "fleet_cps": float(fleet_cps),
         "speedup": float(fleet_cps / numpy_cps),

@@ -38,17 +38,7 @@ def run(n_cameras: int = N_CAMERAS, n_steps: int = N_STEPS,
 
     from repro.core import DEFAULT_GRID
     from repro.core.tradeoff import BudgetConfig
-    from repro.data import SceneConfig, build_video
-    from repro.fleet import (
-        build_episode_tables,
-        fleet_config,
-        fleet_statics,
-        init_fleet,
-        make_scene_provider,
-        run_fleet_episode,
-        workload_spec,
-    )
-    from repro.serving import NetworkTrace, detection_tables
+    from repro.fleet import FleetRunSpec, prepare_fleet_run
 
     if quick is None:
         quick = os.environ.get("BENCH_QUICK", "") == "1"
@@ -58,43 +48,31 @@ def run(n_cameras: int = N_CAMERAS, n_steps: int = N_STEPS,
     grid = DEFAULT_GRID
     wl = _workload()
     budget = BudgetConfig(fps=FPS)
-    cfg = fleet_config(grid, budget)
-    spec = workload_spec(wl)
-    statics = fleet_statics(grid)
-    stride = max(1, int(round(15 / FPS)))
 
     # -- host path: numpy scene + teachers -> EpisodeTables, then scan
+    host = prepare_fleet_run(FleetRunSpec.from_objects(
+        "tables", n_cameras=n_cameras, n_steps=n_steps, seed=SEED,
+        grid=grid, workload=wl, budget=budget))
+    host_prep_s = host.build_s
+    jax.block_until_ready(host.episode())  # compile
     t0 = time.perf_counter()
-    video = build_video(grid, SceneConfig(fps=15, seed=SEED),
-                        (n_steps * stride + 2) / 15.0)
-    tables = detection_tables(video, wl)
-    trace = NetworkTrace.fixed(24.0, 20.0, video.n_frames)
-    ep = build_episode_tables(video, wl, tables, budget, trace,
-                              max_steps=n_steps)
-    host_prep_s = time.perf_counter() - t0
-    state_h = init_fleet(grid, n_cameras)
-    jax.block_until_ready(
-        run_fleet_episode(cfg, spec, statics, state_h, ep))  # compile
-    t0 = time.perf_counter()
-    jax.block_until_ready(run_fleet_episode(cfg, spec, statics, state_h, ep))
+    jax.block_until_ready(host.episode())
     host_scan_s = time.perf_counter() - t0
 
     # -- device path: per-camera scenes + nets generated inside the scan
-    t0 = time.perf_counter()
-    provider, state_d = make_scene_provider(
-        grid, wl, cfg, n_cameras=n_cameras, n_steps=n_steps, seed=SEED,
+    dev = prepare_fleet_run(FleetRunSpec.from_objects(
+        "scene", n_cameras=n_cameras, n_steps=n_steps, seed=SEED,
+        grid=grid, workload=wl, budget=budget,
         person_speed=np.linspace(0.8, 2.0, n_cameras),
         n_people=np.linspace(4, 14, n_cameras).astype(int),
-        mbps=np.full(n_cameras, 24.0), net_seed=SEED)
-    jax.block_until_ready(provider.state0)
-    dev_prep_s = time.perf_counter() - t0
+        mbps=np.full(n_cameras, 24.0), net_seed=SEED))
+    jax.block_until_ready(dev.provider.state0)
+    dev_prep_s = dev.build_s
     t0 = time.perf_counter()
-    jax.block_until_ready(
-        run_fleet_episode(cfg, spec, statics, state_d, provider))  # compile
+    jax.block_until_ready(dev.episode())  # compile
     dev_compile_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    _, out = jax.block_until_ready(
-        run_fleet_episode(cfg, spec, statics, state_d, provider))
+    _, out = jax.block_until_ready(dev.episode())
     dev_scan_s = time.perf_counter() - t0
 
     cps = n_cameras * n_steps

@@ -40,7 +40,8 @@ def main():
     tables = detection_tables(video, workload)
     acc = workload_acc_table(video, workload, tables)
     print(f"  done in {time.time()-t0:.1f}s "
-          f"({video.n_frames} frames x {DEFAULT_GRID.n_cells} cells x 3 zooms)")
+          f"({video.n_frames} frames x {DEFAULT_GRID.n_cells} cells "
+          f"x 3 zooms)")
 
     budget = BudgetConfig(fps=5.0)
     trace = NetworkTrace.fixed(24, 20, video.n_frames)

@@ -35,7 +35,8 @@ def main():
     key = jax.random.PRNGKey(123)
     batch = synthetic_batch(cfg, shape, key)
     final = float(lm_loss(params, cfg, batch["tokens"], batch["labels"]))
-    print(f"held-out loss {final:.3f} (random-init baseline ~{np.log(cfg.vocab):.2f})")
+    print(f"held-out loss {final:.3f} "
+          f"(random-init baseline ~{np.log(cfg.vocab):.2f})")
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ class LMConfig:
     moe_top_k: int = 8
     moe_shared_experts: int = 0
     moe_d_ff: Optional[int] = None          # per-expert hidden dim
-    first_dense_layers: int = 0             # e.g. deepseek: first k layers dense
+    first_dense_layers: int = 0     # e.g. deepseek: first k layers dense
     # MLA (None => GQA)
     mla: bool = False
     q_lora_rank: int = 1536
@@ -104,7 +104,8 @@ class DiffusionConfig:
 
 @dataclass(frozen=True)
 class DetectorConfig:
-    """MadEye approximation model: light ViT backbone + anchor-free det heads."""
+    """MadEye approximation model: light ViT backbone + anchor-free det
+    heads."""
     name: str
     img_res: int
     patch: int
@@ -127,7 +128,7 @@ class DetectorConfig:
 class ShapeSpec:
     """One input-shape cell for an architecture family."""
     name: str
-    kind: str                         # train | prefill | decode | generate | serve
+    kind: str         # train | prefill | decode | generate | serve
     seq_len: int = 0
     global_batch: int = 0
     img_res: int = 0

@@ -1,7 +1,9 @@
-"""MadEye approximation model (the paper's EfficientDet-D0 analogue, TPU-native).
+"""MadEye approximation model (the paper's EfficientDet-D0 analogue,
+TPU-native).
 
 ViT-S-class backbone (frozen across queries, cached on cameras) + FPN-lite neck
-+ anchor-free center/box/class heads (fine-tuned per query). ~4M params to match
++ anchor-free center/box/class heads (fine-tuned per query). ~4M
+params to match
 EfficientDet-D0's 3.9M budget.
 """
 from repro.configs.base import DetectorConfig, register

@@ -14,7 +14,8 @@ DIFFUSION_SHAPES = [
     ShapeSpec("train_256", "train", img_res=256, global_batch=256, steps=1000),
     ShapeSpec("gen_1024", "generate", img_res=1024, global_batch=4, steps=50),
     ShapeSpec("gen_fast", "generate", img_res=512, global_batch=16, steps=4),
-    ShapeSpec("train_1024", "train", img_res=1024, global_batch=32, steps=1000),
+    ShapeSpec("train_1024", "train", img_res=1024, global_batch=32,
+              steps=1000),
 ]
 
 VISION_SHAPES = [

@@ -1,6 +1,7 @@
 """ViT-S/16 [arXiv:2010.11929; paper tier].
 
-Also the backbone of MadEye's approximation-model detector (configs/madeye_approx).
+Also the backbone of MadEye's approximation-model detector
+(configs/madeye_approx).
 """
 from repro.configs.base import VisionConfig, register
 

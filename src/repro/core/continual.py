@@ -102,7 +102,8 @@ def sample_balanced(buffer: ReplayBuffer, window_counts: np.ndarray,
 @partial(jax.jit, static_argnames=("cfg", "lr"))
 def finetune_step(params, opt_state, cfg: DetectorConfig, images, gt_boxes,
                   gt_classes, gt_valid, *, lr: float = 1e-3):
-    """One continual-learning gradient step. Returns (params', state', loss)."""
+    """One continual-learning gradient step. Returns (params', state',
+    loss)."""
     def loss_fn(p):
         return det.detector_loss(p, cfg, images, gt_boxes, gt_classes,
                                  gt_valid, freeze_backbone=True)

@@ -10,11 +10,20 @@ Python call).
                 with static iteration bounds
   step.py       one fleet timestep: budget -> shape -> MST path + shrink
                 -> zoom -> rank -> EWMA update
-  runner.py     lax.scan episode runner behind an observation-provider
+  runner.py     ONE lax.scan episode body behind the observation-provider
                 seam (host-materialized EpisodeTables, device-resident
                 repro.scene_jax SceneProvider, or DetectorProvider — the
                 distilled approximation model scoring rendered crops
                 in-step), shardable over a mesh `data` axis
+  api.py        the public experiment API: ObservationProvider protocol,
+                string-keyed provider registry, declarative FleetRunSpec
+                (+ ShardSpec), run_fleet(spec) -> FleetResult
+
+The one-call entry point:
+
+    from repro.fleet import FleetRunSpec, run_fleet
+    result = run_fleet(FleetRunSpec(provider="scene", n_cameras=256,
+                                    n_steps=64))
 """
 from repro.fleet.state import (
     FleetConfig,
@@ -33,8 +42,25 @@ from repro.fleet.runner import (
     SceneProvider,
     build_episode_tables,
     fleet_network_traces,
+    load_detector_params,
     make_detector_provider,
     make_scene_provider,
+    make_tables_provider,
     materialize_scene_tables,
     run_fleet_episode,
+    save_detector_params,
+    shard_fleet,
+)
+from repro.fleet.api import (
+    DEFAULT_QUERIES,
+    FleetResult,
+    FleetRunSpec,
+    ObservationProvider,
+    PreparedFleetRun,
+    ShardSpec,
+    available_providers,
+    prepare_fleet_run,
+    provider_factory,
+    register_provider,
+    run_fleet,
 )

@@ -1,0 +1,361 @@
+"""Unified fleet experiment API: one declarative entry for every provider.
+
+MadEye's core loop (search -> approximate -> select, paper §3) used to be
+wired three times over — the tables, scene, and detector observation
+paths each had their own scan wrapper, engine function, and CLI flag.
+This module is the single composable entry point instead:
+
+  * `ObservationProvider` — the protocol every observation source
+    implements (init_carry / scan_xs / observe / n_steps / shard). The
+    shipped providers live in runner.py; new scenarios plug in through
+    `register_provider` rather than forking the episode.
+  * the provider registry — string-keyed factories (`tables`, `scene`,
+    `detector`) with one uniform signature, open for future providers
+    (in-scan distillation, camera drift, RL-tuned configs).
+  * `FleetRunSpec` — a declarative, JSON-round-trippable description of
+    a fleet experiment: provider name + kwargs, workload, budget,
+    episode length, seed, and a `ShardSpec` that plumbs mesh placement
+    through the public API.
+  * `run_fleet(spec) -> FleetResult` — build the provider, run the ONE
+    jit'd episode scan (runner._episode), and return a typed result
+    (per-step accuracies, chosen orientations, frames sent, timings)
+    that also round-trips through JSON.
+
+    >>> spec = FleetRunSpec(provider="scene", n_cameras=4, n_steps=32)
+    >>> result = run_fleet(spec)
+    >>> result.accuracy, result.frames_sent[-1]
+
+`prepare_fleet_run` exposes the build/run split for benchmarks that time
+compile vs steady-state themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import DEFAULT_GRID, OrientationGrid, Query, Workload
+from repro.core.tradeoff import BudgetConfig
+from repro.fleet.runner import (
+    make_detector_provider,
+    make_scene_provider,
+    make_tables_provider,
+    run_fleet_episode,
+)
+from repro.fleet.state import (
+    FleetConfig,
+    FleetState,
+    FleetStatics,
+    WorkloadSpec,
+    fleet_config,
+    fleet_statics,
+    workload_spec,
+)
+from repro.fleet.step import FleetStepOut
+
+# the serving launcher's default 4-query workload, as spec-friendly
+# (model, object, task) triples — one definition shared by serve.py and
+# the benchmarks so "the default workload" can't drift between entry
+# points
+DEFAULT_QUERIES = (
+    ("yolov4", "person", "count"),
+    ("ssd", "car", "detect"),
+    ("frcnn", "person", "binary"),
+    ("tiny-yolov4", "person", "agg_count"),
+)
+
+
+@runtime_checkable
+class ObservationProvider(Protocol):
+    """What the unified episode scan needs from an observation source.
+
+    Implementations must also be jax pytrees (register static config as
+    aux_data) so the jitted scan can close over them — see runner.py's
+    EpisodeTables / SceneProvider / DetectorProvider.
+    """
+
+    @property
+    def n_steps(self) -> int:
+        """Episode length this provider can serve."""
+        ...
+
+    def init_carry(self, state: FleetState):
+        """Provider-owned scan carry (scene state, model params, ...)."""
+        ...
+
+    def scan_xs(self):
+        """Pytree of per-step scanned inputs; leaves lead with [E]."""
+        ...
+
+    def observe(self, cfg: FleetConfig, wl: WorkloadSpec, carry,
+                state: FleetState, xs):
+        """(carry, state, xs) -> (new carry, FleetObs) for one step."""
+        ...
+
+    def shard(self, mesh):
+        """Place fleet-axis leaves on the mesh `data` axis."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# provider registry
+# ---------------------------------------------------------------------------
+
+# factory signature: (grid, workload, cfg, *, n_cameras, n_steps, seed,
+# **kwargs) -> (provider, FleetState)
+ProviderFactory = Callable[..., tuple]
+
+_PROVIDERS: dict[str, ProviderFactory] = {}
+
+
+def register_provider(name: str, factory: ProviderFactory) -> None:
+    """Register an observation-provider factory under a spec name."""
+    _PROVIDERS[name] = factory
+
+
+def provider_factory(name: str) -> ProviderFactory:
+    if name not in _PROVIDERS:
+        raise KeyError(
+            f"unknown observation provider {name!r}; available: "
+            f"{', '.join(sorted(_PROVIDERS))}")
+    return _PROVIDERS[name]
+
+
+def available_providers() -> tuple[str, ...]:
+    return tuple(sorted(_PROVIDERS))
+
+
+register_provider("tables", make_tables_provider)
+register_provider("scene", make_scene_provider)
+register_provider("detector", make_detector_provider)
+
+
+# ---------------------------------------------------------------------------
+# declarative run specification
+# ---------------------------------------------------------------------------
+
+def _jsonable(x):
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, np.generic):
+        return x.item()
+    raise TypeError(f"{type(x).__name__} is not JSON-serializable")
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """Mesh placement for the fleet axis, as data instead of a loose
+    helper: `build_mesh` resolves to a launch/mesh.py mesh and the
+    episode shards every provider/state fleet axis over its `data` axis.
+
+    kind "none" runs unsharded; "debug" builds an n_data x n_model mesh
+    from whatever local devices exist; "production" builds the 256-chip
+    pod mesh (multi_pod=True: 2 pods)."""
+    kind: str = "none"
+    n_data: int = 1
+    n_model: int = 1
+    multi_pod: bool = False
+
+    def build_mesh(self):
+        from repro.launch import mesh as mesh_mod
+
+        if self.kind == "none":
+            return None
+        if self.kind == "debug":
+            return mesh_mod.make_debug_mesh(self.n_data, self.n_model)
+        if self.kind == "production":
+            return mesh_mod.make_production_mesh(multi_pod=self.multi_pod)
+        raise ValueError(f"unknown ShardSpec.kind {self.kind!r} "
+                         f"(none | debug | production)")
+
+
+@dataclass(frozen=True)
+class FleetRunSpec:
+    """Everything that defines one fleet experiment, declaratively.
+
+    The spec is JSON-round-trippable (`to_json`/`from_json`) whenever
+    provider_kwargs values are JSON-native (numbers, strings, lists —
+    numpy arrays serialize as lists); in-memory-only kwargs like a
+    prebuilt `video=` still work through `run_fleet` but won't survive
+    serialization."""
+    provider: str = "scene"
+    n_cameras: int = 4
+    n_steps: int | None = 32
+    seed: int = 0
+    workload: tuple = DEFAULT_QUERIES   # ((model, obj, task), ...)
+    budget: dict = field(default_factory=dict)  # BudgetConfig overrides
+    grid: dict = field(default_factory=dict)    # OrientationGrid overrides
+    provider_kwargs: dict = field(default_factory=dict)
+    shard: ShardSpec | None = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "workload",
+            tuple(tuple(q) for q in self.workload))
+        if isinstance(self.shard, dict):
+            object.__setattr__(self, "shard", ShardSpec(**self.shard))
+
+    # -- object views ---------------------------------------------------
+    def grid_obj(self) -> OrientationGrid:
+        return OrientationGrid(**self.grid) if self.grid else DEFAULT_GRID
+
+    def budget_obj(self) -> BudgetConfig:
+        return BudgetConfig(**self.budget)
+
+    def workload_obj(self) -> Workload:
+        return Workload(tuple(Query(*q) for q in self.workload))
+
+    @classmethod
+    def from_objects(cls, provider: str, *, n_cameras: int,
+                     n_steps: int | None = None, seed: int = 0,
+                     grid: OrientationGrid | None = None,
+                     workload: Workload | None = None,
+                     budget: BudgetConfig | None = None,
+                     shard: ShardSpec | None = None,
+                     **provider_kwargs) -> "FleetRunSpec":
+        """Build a spec from the in-memory config objects the rest of
+        the codebase passes around (the engine shims do)."""
+        return cls(
+            provider=provider, n_cameras=n_cameras, n_steps=n_steps,
+            seed=seed,
+            workload=DEFAULT_QUERIES if workload is None else tuple(
+                (q.model, q.obj, q.task) for q in workload.queries),
+            grid={} if grid is None else dataclasses.asdict(grid),
+            budget={} if budget is None else dataclasses.asdict(budget),
+            provider_kwargs=provider_kwargs, shard=shard)
+
+    # -- JSON round trip ------------------------------------------------
+    def to_json(self, **dumps_kwargs) -> str:
+        d = dataclasses.asdict(self)
+        return json.dumps(d, default=_jsonable, **dumps_kwargs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FleetRunSpec":
+        return cls(**json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# the entry point
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PreparedFleetRun:
+    """A spec resolved to runnable pieces: provider built, configs
+    derived, mesh placed. `episode()` runs the unified scan — call it
+    repeatedly to separate compile from steady-state (benchmarks do)."""
+    spec: FleetRunSpec
+    cfg: FleetConfig
+    wl: WorkloadSpec
+    statics: FleetStatics
+    state: FleetState
+    provider: Any
+    mesh: Any
+    build_s: float
+
+    def episode(self, provider=None, state=None):
+        return run_fleet_episode(
+            self.cfg, self.wl, self.statics,
+            self.state if state is None else state,
+            self.provider if provider is None else provider,
+            mesh=self.mesh)
+
+
+def prepare_fleet_run(spec: FleetRunSpec, *, mesh=None) -> PreparedFleetRun:
+    """Resolve a FleetRunSpec: registry lookup, provider construction,
+    mesh placement — everything up to (but not including) the scan.
+    An explicit `mesh` overrides spec.shard."""
+    grid = spec.grid_obj()
+    workload = spec.workload_obj()
+    cfg = fleet_config(grid, spec.budget_obj())
+    factory = provider_factory(spec.provider)
+    t0 = time.perf_counter()
+    provider, state = factory(
+        grid, workload, cfg, n_cameras=spec.n_cameras,
+        n_steps=spec.n_steps, seed=spec.seed,
+        **dict(spec.provider_kwargs))
+    build_s = time.perf_counter() - t0
+    if mesh is None and spec.shard is not None:
+        mesh = spec.shard.build_mesh()
+    return PreparedFleetRun(
+        spec=spec, cfg=cfg, wl=workload_spec(workload),
+        statics=fleet_statics(grid), state=state, provider=provider,
+        mesh=mesh, build_s=build_s)
+
+
+@dataclass
+class FleetResult:
+    """Typed result of one fleet episode.
+
+    Host-side summaries (JSON-round-trippable) plus, when produced by
+    `run_fleet`, the raw device outputs: final `state` (FleetState) and
+    `out` (FleetStepOut, leaves [E, F, ...]) — those two are dropped by
+    `to_json`/`from_json`."""
+    spec: FleetRunSpec
+    n_cameras: int
+    n_steps: int
+    accuracy: float             # mean oracle grade of chosen orientations
+    acc_per_step: tuple         # [E] fleet-mean oracle accuracy
+    chosen: tuple               # [E][F] chosen orientation cell ids
+    frames_sent: tuple          # [E] frames shipped fleet-wide
+    mean_shape: float           # mean explored-shape size
+    timings: dict               # build_s, episode_s (incl. jit compile)
+    state: FleetState | None = None
+    out: FleetStepOut | None = None
+
+    @property
+    def camera_steps_per_s(self) -> float:
+        return self.n_cameras * self.n_steps / max(
+            self.timings.get("episode_s", 0.0), 1e-9)
+
+    def to_json(self, **dumps_kwargs) -> str:
+        # drop the device pytrees BEFORE asdict: asdict deep-copies every
+        # leaf it recurses into, which for state/out would be a full
+        # device->host copy of all per-step outputs just to discard it
+        d = dataclasses.asdict(
+            dataclasses.replace(self, state=None, out=None))
+        d.pop("state"), d.pop("out")
+        d["spec"] = json.loads(self.spec.to_json())
+        return json.dumps(d, default=_jsonable, **dumps_kwargs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FleetResult":
+        d = json.loads(s)
+        d["spec"] = FleetRunSpec(**d["spec"])
+        d["acc_per_step"] = tuple(d["acc_per_step"])
+        d["chosen"] = tuple(tuple(c) for c in d["chosen"])
+        d["frames_sent"] = tuple(d["frames_sent"])
+        return cls(**d)
+
+
+def run_fleet(spec: FleetRunSpec, *, mesh=None) -> FleetResult:
+    """THE fleet entry point: spec in, typed result out.
+
+    Builds the named provider through the registry, runs the whole
+    episode as one jit'd scan (sharded per spec.shard / `mesh`), and
+    summarizes. The first call for a given (provider statics, shapes)
+    pays jit compile inside timings["episode_s"]; rerun the spec (or use
+    `prepare_fleet_run` + `.episode()`) for steady-state numbers."""
+    import jax
+
+    prep = prepare_fleet_run(spec, mesh=mesh)
+    t0 = time.perf_counter()
+    state, out = jax.block_until_ready(prep.episode())
+    episode_s = time.perf_counter() - t0
+
+    acc = np.asarray(out.acc_chosen, np.float32)        # [E, F]
+    sent = np.asarray(out.sent)                         # [E, F, N]
+    return FleetResult(
+        spec=spec, n_cameras=spec.n_cameras,
+        n_steps=int(acc.shape[0]),
+        accuracy=float(acc.mean()),
+        acc_per_step=tuple(float(a) for a in acc.mean(axis=1)),
+        chosen=tuple(tuple(int(c) for c in row)
+                     for row in np.asarray(out.chosen)),
+        frames_sent=tuple(int(s) for s in sent.sum(axis=(1, 2))),
+        mean_shape=float(np.asarray(out.n_explored, np.float32).mean()),
+        timings={"build_s": prep.build_s, "episode_s": episode_s},
+        state=state, out=out)

@@ -1,42 +1,52 @@
-"""Episode runner: one jit'd lax.scan behind an observation-provider seam.
+"""Episode runner: ONE jit'd lax.scan behind the observation-provider seam.
 
-The fleet episode is a scan of `fleet_step` over per-timestep
-observations. Where those observations come from is a *provider* choice,
-dispatched by `run_fleet_episode`:
+The fleet episode is a single scan body (`_episode`) parameterized by an
+`ObservationProvider` (repro.fleet.api): the provider owns a scan-carry
+(`init_carry`), per-step scanned inputs (`scan_xs`), and an `observe`
+hook that turns (carry, state, xs) into the `FleetObs` the controller
+step consumes. Three providers ship in the registry:
 
-  * `EpisodeTables` — the host-materialized path (`build_episode_tables`:
-    O(E*N*Z*P) numpy loops over the procedural scene + teacher models,
-    identical inputs to what run_madeye feeds MadEyeController). Kept for
-    decision-parity tests against the numpy controller and for replaying
-    recorded substrates; every camera shares one world and episode length
-    is bounded by host materialization.
+  * `EpisodeTables` (`tables`) — the host-materialized path
+    (`build_episode_tables`: O(E*N*Z*P) numpy loops over the procedural
+    scene + teacher models, identical inputs to what run_madeye feeds
+    MadEyeController). Kept for decision-parity tests against the numpy
+    controller and for replaying recorded substrates; every camera
+    shares one world and episode length is bounded by host
+    materialization.
 
-  * `SceneProvider` — the device-resident path: per-camera scenes
-    (repro.scene_jax) advance and are observed *inside* the scanned step,
-    so a 512-camera episode with per-camera scene configs and per-camera
-    network traces runs with no per-step host transfers, and episode
-    length / fleet heterogeneity are free of host work. Scene randomness
-    is driven by the per-camera keys threaded through `FleetState.rng`
-    (fold_in(camera_key, frame)), so streams are reproducible and
-    independent of fleet size or shard layout.
+  * `SceneProvider` (`scene`) — the device-resident path: per-camera
+    scenes (repro.scene_jax) advance and are observed *inside* the
+    scanned step, so a 512-camera episode with per-camera scene configs
+    and per-camera network traces runs with no per-step host transfers,
+    and episode length / fleet heterogeneity are free of host work.
+    Scene randomness is driven by the per-camera keys threaded through
+    `FleetState.rng` (fold_in(camera_key, frame)), so streams are
+    reproducible and independent of fleet size or shard layout.
 
-  * `DetectorProvider` — the scene path with the distilled approximation
-    model in the loop (paper §3.4): every candidate (cell, zoom) crop is
-    *rendered* from the scene (scene_jax.render) and *scored* by the
-    detector network (models/detector via serving.engine) inside the
-    scanned step; the controller ranks on those detections, the oracle
-    teachers only grade what it chose (acc_true). Detector params ride
-    in the scan carry so a future in-scan distillation step can update
-    them; render noise keys fold from the same per-camera keys as the
-    scene, so decisions stay fleet-size/shard independent.
+  * `DetectorProvider` (`detector`) — the scene path with the
+    approximation model in the loop (paper §3.4): every candidate
+    (cell, zoom) crop is *rendered* from the scene (scene_jax.render)
+    and *scored* by the detector network (models/detector via
+    serving.engine) inside the scanned step; the controller ranks on
+    those detections, the oracle teachers only grade what it chose
+    (acc_true). Detector params ride in the scan carry so a future
+    in-scan distillation step can update them; render noise keys fold
+    from the same per-camera keys as the scene, so decisions stay
+    fleet-size/shard independent.
 
-The fleet axis shards over a mesh `data` axis (launch/mesh.py) via
-`shard_fleet` in all paths; shared EpisodeTables are replicated (a few
+Each provider registers as a jax pytree whose static configuration
+(SceneSpec, stride, DetectorConfig, chunk) is aux_data — so the one
+jitted `_episode` keys its compilation cache on provider statics
+automatically, and provider arrays trace like any other argument.
+
+The fleet axis shards over a mesh `data` axis (launch/mesh.py) via each
+provider's `shard` hook: shared EpisodeTables are replicated (a few
 hundred KB), scene state/params shard with the fleet, detector params
 are fleet-shared and replicate.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import NamedTuple
@@ -73,6 +83,22 @@ from repro.scene_jax.scene import (
     scene_fleet_params,
 )
 
+# FleetObs fields recorded by collect_obs (everything but the network
+# leaves, which the provider carries separately as [E]/[E, F] traces)
+_TABLE_FIELDS = ("counts", "areas", "centroid", "spread", "extent",
+                 "nbox", "acc_true")
+
+
+def shard_fleet(state, mesh):
+    """Place the fleet axis of every pytree leaf on the mesh `data` axis."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def sh(x):
+        spec = P(*(("data",) + (None,) * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(sh, state)
+
 
 class EpisodeTables(NamedTuple):
     """Scanned observation substrate; every leaf leads with [E] steps.
@@ -90,6 +116,21 @@ class EpisodeTables(NamedTuple):
     @property
     def n_steps(self) -> int:
         return self.counts.shape[0]
+
+    # -- ObservationProvider hooks (repro.fleet.api) --------------------
+    def init_carry(self, state: FleetState):
+        return ()
+
+    def scan_xs(self):
+        return self
+
+    def observe(self, cfg: FleetConfig, wl: WorkloadSpec, carry,
+                state: FleetState, xs):
+        return carry, FleetObs(**xs._asdict())
+
+    def shard(self, mesh):
+        # fleet-shared tables replicate (a few hundred KB)
+        return self
 
 
 @dataclass(frozen=True)
@@ -111,13 +152,41 @@ class SceneProvider:
     def n_steps(self) -> int:
         return self.mbps.shape[0]
 
+    # -- ObservationProvider hooks --------------------------------------
+    def init_carry(self, state: FleetState):
+        return self.state0
+
+    def scan_xs(self):
+        return (self.mbps, self.rtt)
+
+    def observe(self, cfg: FleetConfig, wl: WorkloadSpec, carry,
+                state: FleetState, xs):
+        mbps_t, rtt_t = xs
+        sc = advance_scene(self.spec, self.params, state.rng, carry,
+                           state.step_idx, self.stride)
+        o = observe_all_cells(self.spec, self.teach, self.params, sc,
+                              state.step_idx * self.stride, self.windows,
+                              task_id=wl.task_id, pair_idx=wl.pair_idx,
+                              n_zoom=len(cfg.zoom_levels),
+                              cam_salt=state.rng[:, 0])
+        obs = FleetObs(counts=o.counts, areas=o.areas, centroid=o.centroid,
+                       spread=o.spread, extent=o.extent, nbox=o.nbox,
+                       acc_true=o.acc_true, mbps=mbps_t, rtt=rtt_t)
+        return sc, obs
+
+    def shard(self, mesh):
+        return dataclasses.replace(
+            self, state0=shard_fleet(self.state0, mesh),
+            params=shard_fleet(self.params, mesh))
+
 
 @dataclass(frozen=True)
 class DetectorProvider:
-    """Scene-backed provider with the distilled detector in the loop:
-    candidate-orientation crops are rendered and scored by the
-    approximation network inside the scanned step. Build with
-    `make_detector_provider`."""
+    """Scene-backed provider with the approximation model in the loop:
+    candidate-orientation crops are rendered and scored by the detector
+    network inside the scanned step. Build with `make_detector_provider`
+    (pass a distilled checkpoint — pytree or .npz path — for a trained
+    camera)."""
     scene: SceneProvider        # world + teachers (oracle feedback)
     det_cfg: object             # DetectorConfig (hashable, jit-static)
     det_params: object          # detector pytree (scan carry)
@@ -129,6 +198,81 @@ class DetectorProvider:
     @property
     def n_steps(self) -> int:
         return self.scene.n_steps
+
+    # -- ObservationProvider hooks --------------------------------------
+    def init_carry(self, state: FleetState):
+        # detector params ride in the carry (unchanged for now; an
+        # in-scan distillation update slots in there)
+        return (self.scene.state0, self.det_params)
+
+    def scan_xs(self):
+        return (self.scene.mbps, self.scene.rtt)
+
+    def observe(self, cfg: FleetConfig, wl: WorkloadSpec, carry,
+                state: FleetState, xs):
+        from repro.serving.engine import detector_scores
+
+        sc, dp = carry
+        mbps_t, rtt_t = xs
+        p = self.scene
+        kinds = jnp.asarray(kind_mask(p.spec))
+        pair_cls = jnp.asarray(wl.pair_cls, jnp.int32)
+        res = self.det_cfg.img_res
+        c = p.windows.shape[0]
+        wchunks = p.windows.reshape(c // self.chunk, self.chunk, 4)
+
+        sc = advance_scene(p.spec, p.params, state.rng, sc,
+                           state.step_idx, p.stride)
+        frame = state.step_idx * p.stride
+        # oracle pass: only acc_true survives DCE — the teachers grade
+        # the camera's choices, they no longer feed its ranking
+        o = observe_all_cells(p.spec, p.teach, p.params, sc, frame,
+                              p.windows, task_id=wl.task_id,
+                              pair_idx=wl.pair_idx,
+                              n_zoom=len(cfg.zoom_levels),
+                              cam_salt=state.rng[:, 0])
+        noise_img = render_noise(state.rng, frame, res) * self.noise
+
+        def score_chunk(wc):
+            crops = render_fleet_crops(sc.pos, sc.size, kinds, sc.oid, wc,
+                                       res=res,
+                                       min_visible=p.spec.min_visible,
+                                       noise=noise_img)
+            return jax.vmap(
+                lambda im: detector_scores(dp, self.det_cfg, im))(crops)
+
+        # slab the N*Z candidate windows so peak memory is
+        # [F, chunk, res, res, 3] instead of all crops at once
+        dets = jax.lax.map(score_chunk, wchunks)
+        dets = jax.tree.map(
+            lambda x: jnp.moveaxis(x, 0, 1).reshape(
+                (x.shape[1], c) + x.shape[3:]), dets)
+        do = detections_obs(dets, p.windows, pair_cls, self.thresh,
+                            self.geo_thresh, o.acc_true,
+                            n_zoom=len(cfg.zoom_levels))
+        obs = FleetObs(counts=do.counts, areas=do.areas,
+                       centroid=do.centroid, spread=do.spread,
+                       extent=do.extent, nbox=do.nbox,
+                       acc_true=do.acc_true, mbps=mbps_t, rtt=rtt_t)
+        return (sc, dp), obs
+
+    def shard(self, mesh):
+        # scene state/params shard with the fleet; detector params are
+        # fleet-shared and replicate
+        return dataclasses.replace(self, scene=self.scene.shard(mesh))
+
+
+# static configuration is aux_data: the one jitted episode keys its
+# compilation cache on (SceneSpec, stride, DetectorConfig, chunk) through
+# the treedef, arrays trace as children
+jax.tree_util.register_dataclass(
+    SceneProvider,
+    data_fields=["params", "teach", "state0", "windows", "mbps", "rtt"],
+    meta_fields=["spec", "stride"])
+jax.tree_util.register_dataclass(
+    DetectorProvider,
+    data_fields=["scene", "det_params", "thresh", "geo_thresh", "noise"],
+    meta_fields=["det_cfg", "chunk"])
 
 
 def build_episode_tables(video, workload: Workload, tables: dict,
@@ -190,8 +334,58 @@ def build_episode_tables(video, workload: Workload, tables: dict,
 
 
 # ---------------------------------------------------------------------------
-# scene-backed provider construction
+# provider construction (the registry factories — repro.fleet.api)
 # ---------------------------------------------------------------------------
+
+def budget_from_config(cfg: FleetConfig) -> BudgetConfig:
+    """Recover the numpy-side BudgetConfig a FleetConfig mirrors, so
+    host-materialization helpers and the jitted step consume identical
+    constants (the inverse of `fleet_config` for the budget fields)."""
+    return BudgetConfig(
+        fps=cfg.fps, rotation_speed=cfg.rotation_speed,
+        hop_degrees=cfg.hop_degrees, approx_infer_s=cfg.approx_infer_s,
+        backend_infer_s=cfg.backend_infer_s, frame_bytes=cfg.frame_bytes,
+        min_send=cfg.min_send, max_send=cfg.max_send,
+        pipelined=cfg.pipelined)
+
+
+def make_tables_provider(grid, workload: Workload, cfg: FleetConfig, *,
+                         n_cameras: int, n_steps: int | None = None,
+                         seed: int = 3, mbps: float = 24.0,
+                         rtt_ms: float = 20.0, approx_miss: float = 0.12,
+                         scene_fps: float = 15.0, video=None, tables=None,
+                         trace=None, acc_table=None
+                         ) -> tuple[EpisodeTables, FleetState]:
+    """Host-materialized provider: numpy scene + teacher oracles recorded
+    into EpisodeTables (every camera shares one world).
+
+    Builds the substrate from `seed` (procedural scene at `scene_fps`,
+    long enough for `n_steps` controller steps at cfg.fps, fixed
+    mbps/rtt link) — or reuses prebuilt `video`/`tables`/`trace`/
+    `acc_table` objects when the caller already has them (the serving
+    launcher and benchmarks do; those kwargs are in-memory-only, not
+    JSON-serializable)."""
+    from repro.data import SceneConfig, build_video
+    from repro.fleet.state import init_fleet
+    from repro.serving import NetworkTrace, detection_tables
+
+    budget = budget_from_config(cfg)
+    if video is None:
+        if n_steps is None:
+            raise ValueError("tables provider needs n_steps (or a "
+                             "prebuilt video=) to size the substrate")
+        stride = max(1, int(round(scene_fps / cfg.fps)))
+        video = build_video(grid, SceneConfig(fps=scene_fps, seed=seed),
+                            (n_steps * stride + 2) / scene_fps)
+    if tables is None:
+        tables = detection_tables(video, workload)
+    if trace is None:
+        trace = NetworkTrace.fixed(mbps, rtt_ms, video.n_frames)
+    ep = build_episode_tables(video, workload, tables, budget, trace,
+                              approx_miss=approx_miss, acc_table=acc_table,
+                              max_steps=n_steps)
+    return ep, init_fleet(grid, n_cameras)
+
 
 def fleet_network_traces(n_steps: int, n_cameras: int | None = None, *,
                          mbps=24.0, rtt_ms=20.0, seed: int | None = None
@@ -256,34 +450,90 @@ def make_scene_provider(grid, workload: Workload, cfg: FleetConfig, *,
     return provider, state
 
 
+def save_detector_params(path: str, params) -> str:
+    """Write a detector params pytree (nested dicts of arrays) to .npz,
+    keys '/'-joined — the checkpoint format `make_detector_provider`
+    loads. Anything outside that contract (non-dict interior nodes,
+    '/'-bearing or empty keys, non-array leaves) fails loudly here
+    rather than producing an .npz that loads into a different treedef.
+    Returns the path written."""
+    flat = {}
+
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            for k in sorted(tree):
+                k = str(k)
+                if "/" in k or not k:
+                    raise ValueError(
+                        f"key {k!r} under {prefix or '<root>'!r} would "
+                        f"not round-trip through '/'-joined npz names")
+                walk(tree[k], f"{prefix}/{k}" if prefix else k)
+        elif not prefix:
+            raise TypeError("detector params must be a dict pytree, got "
+                            f"{type(tree).__name__}")
+        elif not hasattr(tree, "shape"):
+            raise TypeError(f"leaf {prefix!r} is {type(tree).__name__}, "
+                            f"not an array")
+        else:
+            flat[prefix] = np.asarray(tree)
+
+    walk(params, "")
+    np.savez(path, **flat)
+    return path
+
+
+def load_detector_params(path: str) -> dict:
+    """Load a `save_detector_params` .npz back into the nested pytree."""
+    out: dict = {}
+    with np.load(path) as z:
+        for key in z.files:
+            node = out
+            parts = key.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jnp.asarray(z[key])
+    return out
+
+
 def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
                            n_cameras: int, n_steps: int,
                            det_cfg=None, det_params=None,
-                           det_seed: int = 0, thresh=0.3,
-                           geo_thresh: float = 0.35, noise: float = 0.05,
+                           det_seed: int = 0, thresh=None,
+                           geo_thresh: float | None = None,
+                           noise: float = 0.05,
                            chunk: int | None = None, **scene_kwargs
                            ) -> tuple[DetectorProvider, FleetState]:
-    """Scene provider + the distilled detector scored in-step.
+    """Scene provider + the approximation detector scored in-step.
 
     det_cfg defaults to the madeye-approx smoke config (64 px crops — the
-    crop resolution IS det_cfg.img_res); det_params default to a fresh
-    `detector_init(PRNGKey(det_seed))` — pass a distilled checkpoint for
-    a trained camera. `thresh` broadcasts to a per-pair [P] score
-    threshold; the defaults sit inside a fresh (undistilled) detector's
-    score range so the untrained demo still produces scene-dependent
-    counts — raise both toward ~0.5 for a trained checkpoint. `chunk`
-    bounds how many of the N*Z candidate windows are
-    rendered + scored at once inside the step (peak-memory knob; must
-    divide N*Z, default one cell-row of zooms at a time).
-    `scene_kwargs` are make_scene_provider's heterogeneity knobs.
+    crop resolution IS det_cfg.img_res). det_params select the camera's
+    approximation model: a trained pytree, a `.npz` checkpoint path
+    (written by `save_detector_params`, e.g. a distilled snapshot), or
+    None for a fresh undistilled `detector_init(PRNGKey(det_seed))` demo
+    net. `thresh` broadcasts to a per-pair [P] score threshold; left
+    None it adapts to the params source — 0.3 for the undistilled demo
+    (inside a fresh net's score range, so counts stay scene-dependent),
+    0.5 for a trained checkpoint — and `geo_thresh` (zoom-geometry score
+    floor) follows the same rule at +0.05. `chunk` bounds how many of
+    the N*Z candidate windows are rendered + scored at once inside the
+    step (peak-memory knob; must divide N*Z, default one cell-row of
+    zooms at a time). `scene_kwargs` are make_scene_provider's
+    heterogeneity knobs.
     """
     from repro.configs import get_smoke_config
     from repro.models.detector import detector_init
 
     if det_cfg is None:
         det_cfg = get_smoke_config("madeye-approx")
-    if det_params is None:
+    trained = det_params is not None
+    if isinstance(det_params, (str, bytes)):
+        det_params = load_detector_params(det_params)
+    elif det_params is None:
         det_params = detector_init(jax.random.PRNGKey(det_seed), det_cfg)
+    if thresh is None:
+        thresh = 0.5 if trained else 0.3
+    if geo_thresh is None:
+        geo_thresh = float(np.asarray(thresh).max()) + 0.05
     scene, state = make_scene_provider(
         grid, workload, cfg, n_cameras=n_cameras, n_steps=n_steps,
         **scene_kwargs)
@@ -308,121 +558,33 @@ def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
 
 
 # ---------------------------------------------------------------------------
-# episodes
+# THE episode: one scan body for every provider
 # ---------------------------------------------------------------------------
 
-def shard_fleet(state, mesh):
-    """Place the fleet axis of every pytree leaf on the mesh `data` axis."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    def sh(x):
-        spec = P(*(("data",) + (None,) * (x.ndim - 1)))
-        return jax.device_put(x, NamedSharding(mesh, spec))
-
-    return jax.tree.map(sh, state)
-
-
-@partial(jax.jit, static_argnames=("cfg", "wl"))
+@partial(jax.jit, static_argnames=("cfg", "wl", "collect_obs"))
 def _episode(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
-             state: FleetState, tables: EpisodeTables):
-    def body(st, xs):
-        # xs is one EpisodeTables step; match FleetObs fields by name
-        st, out = fleet_step(cfg, wl, statics, st,
-                             FleetObs(**xs._asdict()))
-        return st, out
+             state: FleetState, provider, *, collect_obs: bool = False):
+    """The unified scan body: provider.observe generates this step's
+    FleetObs from (provider carry, controller state, scanned xs), then
+    fleet_step consumes it. Every provider — host tables, device scenes,
+    detector-in-the-loop — runs through this one program; adding a
+    scenario means adding a provider, not a fourth scan body.
 
-    return jax.lax.scan(body, state, tables)
-
-
-@partial(jax.jit,
-         static_argnames=("cfg", "wl", "spec", "stride", "collect_obs"))
-def _episode_scene(cfg: FleetConfig, wl: WorkloadSpec, spec: SceneSpec,
-                   stride: int, statics: FleetStatics, state: FleetState,
-                   scene0: SceneState, params: SceneFleetParams,
-                   teach: TeacherArrays, windows, mbps, rtt, *,
-                   collect_obs: bool = False):
-    n_zoom = len(cfg.zoom_levels)
-
+    collect_obs additionally records camera 0's observation tables
+    (per-camera [F, ...] leaves sliced to [0]) so a scene episode can be
+    re-materialized as EpisodeTables — see materialize_scene_tables.
+    """
     def body(carry, xs):
-        st, sc = carry
-        mbps_t, rtt_t = xs
-        sc = advance_scene(spec, params, st.rng, sc, st.step_idx, stride)
-        o = observe_all_cells(spec, teach, params, sc,
-                              st.step_idx * stride, windows,
-                              task_id=wl.task_id, pair_idx=wl.pair_idx,
-                              n_zoom=n_zoom, cam_salt=st.rng[:, 0])
-        obs = FleetObs(counts=o.counts, areas=o.areas, centroid=o.centroid,
-                       spread=o.spread, extent=o.extent, nbox=o.nbox,
-                       acc_true=o.acc_true, mbps=mbps_t, rtt=rtt_t)
+        st, pc = carry
+        pc, obs = provider.observe(cfg, wl, pc, st, xs)
         st, out = fleet_step(cfg, wl, statics, st, obs)
         if collect_obs:
-            return (st, sc), (out, jax.tree.map(lambda x: x[0], o))
-        return (st, sc), out
+            rec = {f: getattr(obs, f)[0] for f in _TABLE_FIELDS}
+            return (st, pc), (out, rec)
+        return (st, pc), out
 
-    (state, _), ys = jax.lax.scan(body, (state, scene0), (mbps, rtt))
-    return state, ys
-
-
-@partial(jax.jit, static_argnames=("cfg", "wl", "spec", "det_cfg",
-                                   "stride", "chunk"))
-def _episode_detector(cfg: FleetConfig, wl: WorkloadSpec, spec: SceneSpec,
-                      det_cfg, stride: int, chunk: int,
-                      statics: FleetStatics, state: FleetState,
-                      scene0: SceneState, params: SceneFleetParams,
-                      teach: TeacherArrays, windows, mbps, rtt,
-                      det_params, thresh, geo_thresh, noise):
-    """The scene episode with the approximation model in the loop: each
-    step renders every candidate (cell, zoom) crop from the live scene
-    and scores it with the detector network — all inside one scan, no
-    per-step host transfers. Detector params are threaded through the
-    scan carry (unchanged for now; an in-scan distillation update slots
-    in there)."""
-    from repro.serving.engine import detector_scores
-
-    n_zoom = len(cfg.zoom_levels)
-    kinds = jnp.asarray(kind_mask(spec))
-    pair_cls = jnp.asarray(wl.pair_cls, jnp.int32)
-    res = det_cfg.img_res
-    c = windows.shape[0]
-    wchunks = windows.reshape(c // chunk, chunk, 4)
-
-    def body(carry, xs):
-        st, sc, dp = carry
-        mbps_t, rtt_t = xs
-        sc = advance_scene(spec, params, st.rng, sc, st.step_idx, stride)
-        frame = st.step_idx * stride
-        # oracle pass: only acc_true survives DCE — the teachers grade
-        # the camera's choices, they no longer feed its ranking
-        o = observe_all_cells(spec, teach, params, sc, frame, windows,
-                              task_id=wl.task_id, pair_idx=wl.pair_idx,
-                              n_zoom=n_zoom, cam_salt=st.rng[:, 0])
-        noise_img = render_noise(st.rng, frame, res) * noise
-
-        def score_chunk(wc):
-            crops = render_fleet_crops(sc.pos, sc.size, kinds, sc.oid, wc,
-                                       res=res,
-                                       min_visible=spec.min_visible,
-                                       noise=noise_img)
-            return jax.vmap(lambda im: detector_scores(dp, det_cfg, im))(
-                crops)
-
-        # slab the N*Z candidate windows so peak memory is
-        # [F, chunk, res, res, 3] instead of all crops at once
-        dets = jax.lax.map(score_chunk, wchunks)
-        dets = jax.tree.map(
-            lambda x: jnp.moveaxis(x, 0, 1).reshape(
-                (x.shape[1], c) + x.shape[3:]), dets)
-        do = detections_obs(dets, windows, pair_cls, thresh, geo_thresh,
-                            o.acc_true, n_zoom=n_zoom)
-        obs = FleetObs(counts=do.counts, areas=do.areas,
-                       centroid=do.centroid, spread=do.spread,
-                       extent=do.extent, nbox=do.nbox,
-                       acc_true=do.acc_true, mbps=mbps_t, rtt=rtt_t)
-        st, out = fleet_step(cfg, wl, statics, st, obs)
-        return (st, sc, dp), out
-
-    (state, _, _), ys = jax.lax.scan(body, (state, scene0, det_params),
-                                     (mbps, rtt))
+    (state, _), ys = jax.lax.scan(
+        body, (state, provider.init_carry(state)), provider.scan_xs())
     return state, ys
 
 
@@ -439,59 +601,36 @@ def materialize_scene_tables(cfg: FleetConfig, wl: WorkloadSpec,
     legally round reductions differently. That costs one episode at full
     F; for cheap replay tables where bit-exactness doesn't matter, build
     the provider/state at n_cameras=1 and materialize that instead."""
-    _, (out, o) = _episode_scene(
-        cfg, wl, provider.spec, provider.stride, statics, state,
-        provider.state0, provider.params, provider.teach, provider.windows,
-        provider.mbps, provider.rtt, collect_obs=True)
+    _, (out, rec) = _episode(cfg, wl, statics, state, provider,
+                             collect_obs=True)
     mbps, rtt = provider.mbps, provider.rtt
     if mbps.ndim == 2:
         mbps = mbps[:, 0]
     if rtt.ndim == 2:
         rtt = rtt[:, 0]
-    return EpisodeTables(counts=o.counts, areas=o.areas,
-                         centroid=o.centroid, spread=o.spread,
-                         extent=o.extent, nbox=o.nbox, acc_true=o.acc_true,
-                         mbps=mbps, rtt=rtt)
+    return EpisodeTables(mbps=mbps, rtt=rtt,
+                         **{f: rec[f] for f in _TABLE_FIELDS})
 
 
 def run_fleet_episode(cfg: FleetConfig, wl: WorkloadSpec,
                       statics: FleetStatics, state: FleetState,
-                      tables: EpisodeTables | SceneProvider
-                      | DetectorProvider, *,
-                      mesh=None) -> tuple[FleetState, FleetStepOut]:
+                      provider, *, mesh=None
+                      ) -> tuple[FleetState, FleetStepOut]:
     """Run the whole episode in one jit'd scan.
 
-    `tables` selects the observation provider: an `EpisodeTables`
-    (host-materialized, fleet-shared world), a `SceneProvider`
-    (device-resident per-camera scenes generated inside the scan), or a
-    `DetectorProvider` (scene + rendered crops scored by the distilled
-    detector inside the scan).
-    Returns (final state, FleetStepOut with leaves stacked to [E, F, ...]).
-    With `mesh`, the fleet axis (state, and scene state/params on the
-    scene paths) is sharded over the mesh `data` axis first — the scan
-    then runs SPMD across devices, like launch/serve.py's batched
-    inference path.
+    `provider` is any ObservationProvider — the shipped EpisodeTables /
+    SceneProvider / DetectorProvider, or anything registered through
+    repro.fleet.api. Returns (final state, FleetStepOut with leaves
+    stacked to [E, F, ...]). With `mesh`, the fleet axis (controller
+    state plus whatever the provider's `shard` hook places — scene
+    state/params on the scene paths) is sharded over the mesh `data`
+    axis first, and the scan runs SPMD across devices, like
+    launch/serve.py's batched inference path.
+
+    Prefer `repro.fleet.api.run_fleet(spec)` unless you are composing
+    providers/state yourself (parity tests and benchmarks do).
     """
     if mesh is not None:
         state = shard_fleet(state, mesh)
-    if isinstance(tables, DetectorProvider):
-        d, p = tables, tables.scene
-        scene0, params = p.state0, p.params
-        if mesh is not None:
-            scene0 = shard_fleet(scene0, mesh)
-            params = shard_fleet(params, mesh)
-        return _episode_detector(cfg, wl, p.spec, d.det_cfg, p.stride,
-                                 d.chunk, statics, state, scene0, params,
-                                 p.teach, p.windows, p.mbps, p.rtt,
-                                 d.det_params, d.thresh, d.geo_thresh,
-                                 d.noise)
-    if isinstance(tables, SceneProvider):
-        p = tables
-        scene0, params = p.state0, p.params
-        if mesh is not None:
-            scene0 = shard_fleet(scene0, mesh)
-            params = shard_fleet(params, mesh)
-        return _episode_scene(cfg, wl, p.spec, p.stride, statics, state,
-                              scene0, params, p.teach, p.windows,
-                              p.mbps, p.rtt)
-    return _episode(cfg, wl, statics, state, tables)
+        provider = provider.shard(mesh)
+    return _episode(cfg, wl, statics, state, provider)

@@ -72,6 +72,8 @@ class FleetStepOut(NamedTuple):
     pred_acc: jnp.ndarray   # [F, N] predicted workload accuracy
     path_time: jnp.ndarray  # [F] seconds
     k_send: jnp.ndarray     # [F] int32
+    chosen: jnp.ndarray     # [F] int32 — top-ranked explored cell
+    acc_chosen: jnp.ndarray  # [F] oracle accuracy of the chosen cell
 
 
 # ---------------------------------------------------------------------------
@@ -467,5 +469,7 @@ def fleet_step(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
         net_count=net_count, rtt=rtt, rng=state.rng)
     out = FleetStepOut(explored=explored, order=order, n_explored=cnt,
                        zooms=zoom_idx, sent=sent, pred_acc=pred,
-                       path_time=path_time, k_send=k_send)
+                       path_time=path_time, k_send=k_send,
+                       chosen=best_pred.astype(jnp.int32),
+                       acc_chosen=true_g[arange_f, best_pred])
     return new_state, out

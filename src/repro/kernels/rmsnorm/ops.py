@@ -1,4 +1,5 @@
-"""jit'd wrapper: arbitrary leading dims, row padding, VMEM-aware block size."""
+"""jit'd wrapper: arbitrary leading dims, row padding, VMEM-aware
+block size."""
 from __future__ import annotations
 
 from functools import partial

@@ -16,7 +16,8 @@ depth — exact because per-layer structure and sharding are depth-invariant:
 Writes roofline_analysis.json, consumed by benchmarks/bench_roofline.py.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.analysis --all --out roofline_analysis.json
+  PYTHONPATH=src python -m repro.launch.analysis --all \
+      --out roofline_analysis.json
 """
 
 import argparse

@@ -2,11 +2,20 @@
 
 Runs the full adaptive-orientation pipeline on the procedural scene:
 controller plans -> camera sweeps -> approximation proxies score -> top-k
-ship -> accuracy vs the oracle baselines. With --nn the approximation
-model is the real detector network (repro/models/detector.py) executed
-through the batched InferenceEngine instead of the analytic proxy.
+ship -> accuracy vs the oracle baselines. `--fleet N` additionally runs
+an N-camera fleet through the unified experiment API
+(repro.fleet.run_fleet) with the observation provider picked by
+`--provider`:
+
+  tables    host-materialized teacher tables, one shared world (default;
+            what plain --fleet always ran)
+  scene     device-resident heterogeneous scenes + per-camera network
+            traces, observations generated inside the episode scan
+  detector  scene + the approximation detector in the loop: candidate
+            crops rendered and scored by the network inside the scan
 
   PYTHONPATH=src python -m repro.launch.serve --fps 5 --duration 20
+  PYTHONPATH=src python -m repro.launch.serve --fleet 4 --provider scene
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ from repro.core import DEFAULT_GRID, Query, Workload
 from repro.core.grid import OrientationGrid
 from repro.core.tradeoff import BudgetConfig
 from repro.data import SceneConfig, build_video
+from repro.fleet.api import DEFAULT_QUERIES
 from repro.serving import (
     NetworkTrace,
     detection_tables,
@@ -27,27 +37,64 @@ from repro.serving import (
     workload_acc_table,
 )
 
-DEFAULT_WORKLOAD = Workload((
-    Query("yolov4", "person", "count"),
-    Query("ssd", "car", "detect"),
-    Query("frcnn", "person", "binary"),
-    Query("tiny-yolov4", "person", "agg_count"),
-))
+DEFAULT_WORKLOAD = Workload(tuple(Query(*q) for q in DEFAULT_QUERIES))
+
+PROVIDERS = ("tables", "scene", "detector")
+
+
+def _fleet_spec(provider: str, n: int, *, n_steps, seed, mbps, rtt_ms,
+                grid, workload, budget, substrate):
+    """The FleetRunSpec serve runs for `--fleet n --provider name` —
+    scene/detector fleets get per-camera heterogeneity (world seeds,
+    densities, speeds, mobile network traces); the tables fleet reuses
+    the already-built host substrate."""
+    from repro.fleet import FleetRunSpec
+
+    if provider == "tables":
+        video, tables, acc, trace = substrate
+        return FleetRunSpec.from_objects(
+            "tables", n_cameras=n, n_steps=None, seed=seed, grid=grid,
+            workload=workload, budget=budget, video=video, tables=tables,
+            trace=trace, acc_table=acc)
+    rng = np.random.default_rng(seed)
+    kwargs = dict(
+        scene_seeds=np.arange(n),
+        person_speed=rng.uniform(0.8, 2.0, n),
+        car_speed=rng.uniform(6.0, 14.0, n),
+        n_people=rng.integers(4, 15, n), n_cars=rng.integers(2, 9, n))
+    if provider == "scene":
+        kwargs.update(mbps=np.full(n, mbps), rtt_ms=rtt_ms, net_seed=seed)
+    return FleetRunSpec.from_objects(
+        provider, n_cameras=n, n_steps=n_steps, seed=seed, grid=grid,
+        workload=workload, budget=budget, **kwargs)
 
 
 def serve(fps: float, duration: float, *, seed: int = 3,
           mbps: float = 24.0, rtt_ms: float = 20.0,
           rotation_speed: float = 400.0, pipelined: bool = False,
-          fleet: int = 0, fleet_scene: int = 0, fleet_detector: int = 0,
+          fleet: int = 0, provider: str = "tables",
+          fleet_scene: int = 0, fleet_detector: int = 0,
           grid: OrientationGrid = DEFAULT_GRID,
           workload: Workload = DEFAULT_WORKLOAD):
-    if fleet < 0:
-        raise SystemExit(f"--fleet must be >= 0, got {fleet}")
-    if fleet_scene < 0:
-        raise SystemExit(f"--fleet-scene must be >= 0, got {fleet_scene}")
-    if fleet_detector < 0:
-        raise SystemExit(
-            f"--fleet-detector must be >= 0, got {fleet_detector}")
+    from repro.fleet import run_fleet
+
+    for name, val in (("--fleet", fleet), ("--fleet-scene", fleet_scene),
+                      ("--fleet-detector", fleet_detector)):
+        if val < 0:
+            raise SystemExit(f"{name} must be >= 0, got {val}")
+    if provider not in PROVIDERS:
+        raise SystemExit(f"--provider must be one of {PROVIDERS}, "
+                         f"got {provider!r}")
+
+    # fold the deprecated aliases into (n_cameras, provider) runs
+    runs = [(fleet, provider)] if fleet else []
+    for n, name, flag in ((fleet_scene, "scene", "--fleet-scene"),
+                          (fleet_detector, "detector", "--fleet-detector")):
+        if n:
+            print(f"note: {flag} N is deprecated; "
+                  f"use --fleet N --provider {name}")
+            runs.append((n, name))
+
     t0 = time.time()
     video = build_video(grid, SceneConfig(fps=15, seed=seed), duration)
     tables = detection_tables(video, workload)
@@ -62,59 +109,22 @@ def serve(fps: float, duration: float, *, seed: int = 3,
     print(f"MadEye      : acc={res.accuracy:.3f} shape={res.mean_shape:.1f} "
           f"sent/step={res.frames_sent/len(res.visited):.1f} "
           f"best-explored={res.best_explored_rate:.2f}")
-    if fleet:
-        from repro.serving.engine import run_fleet_controller
-        t1 = time.time()
-        _, out = run_fleet_controller(video, workload, tables, budget,
-                                      trace, n_cameras=fleet, acc_table=acc)
-        n_steps = int(out.explored.shape[0])
-        wall = time.time() - t1
-        shapes = np.asarray(out.n_explored, float)
-        print(f"fleet x{fleet:<5d}: {n_steps} steps in {wall:.2f}s "
-              f"end-to-end incl. jit compile "
-              f"({fleet * n_steps / wall:.0f} camera-steps/s, "
-              f"mean shape {shapes.mean():.1f}; "
-              f"see benchmarks/bench_fleet_scale.py for steady-state)")
-    if fleet_scene:
-        # device-resident heterogeneous fleet: every camera gets its own
-        # scene seed, a spread of densities/speeds, and its own mobile
-        # network trace — observations generated inside the episode scan
-        from repro.serving.engine import run_fleet_scene_controller
-        f = fleet_scene
-        n_steps = max(1, int(duration * fps))
-        rng = np.random.default_rng(seed)
-        t1 = time.time()
-        _, out = run_fleet_scene_controller(
-            grid, workload, budget, n_cameras=f, n_steps=n_steps,
-            seed=seed, scene_seeds=np.arange(f),
-            person_speed=rng.uniform(0.8, 2.0, f),
-            car_speed=rng.uniform(6.0, 14.0, f),
-            n_people=rng.integers(4, 15, f), n_cars=rng.integers(2, 9, f),
-            mbps=np.full(f, mbps), rtt_ms=rtt_ms, net_seed=seed)
-        wall = time.time() - t1
-        shapes = np.asarray(out.n_explored, float)
-        print(f"scene x{f:<5d}: {n_steps} steps in {wall:.2f}s "
-              f"end-to-end incl. jit compile, zero host tables "
-              f"({f * n_steps / wall:.0f} camera-steps/s, "
-              f"mean shape {shapes.mean():.1f}; per-camera scenes+nets)")
-    if fleet_detector:
-        # the full camera-side pipeline: candidate orientations rendered
-        # from the device scene and scored by the distilled detector
-        # network inside the episode scan — ranking never reads teacher
-        # tables, the oracle only grades the chosen orientation
-        from repro.serving.engine import run_fleet_detector_controller
-        f = fleet_detector
-        n_steps = max(1, int(duration * fps))
-        t1 = time.time()
-        _, out = run_fleet_detector_controller(
-            grid, workload, budget, n_cameras=f, n_steps=n_steps,
-            seed=seed, scene_seeds=np.arange(f))
-        wall = time.time() - t1
-        shapes = np.asarray(out.n_explored, float)
-        print(f"detect x{f:<4d}: {n_steps} steps in {wall:.2f}s "
-              f"end-to-end incl. jit compile, in-scan render+infer "
-              f"({f * n_steps / wall:.0f} camera-steps/s, "
-              f"mean shape {shapes.mean():.1f}; distilled-model ranking)")
+
+    n_steps = max(1, int(duration * fps))
+    for n, name in runs:
+        spec = _fleet_spec(name, n, n_steps=n_steps, seed=seed, mbps=mbps,
+                           rtt_ms=rtt_ms, grid=grid, workload=workload,
+                           budget=budget,
+                           substrate=(video, tables, acc, trace))
+        r = run_fleet(spec)
+        wall = r.timings["build_s"] + r.timings["episode_s"]
+        print(f"fleet x{n:<4d} [{name}]: acc={r.accuracy:.3f} "
+              f"mean shape {r.mean_shape:.1f}, "
+              f"sent/step={sum(r.frames_sent)/(r.n_steps*n):.1f}, "
+              f"{r.n_steps} steps in {wall:.2f}s end-to-end incl. jit "
+              f"compile ({n * r.n_steps / wall:.0f} camera-steps/s; "
+              f"see benchmarks/ for steady-state)")
+
     for scheme in ("one_time_fixed", "best_fixed", "best_dynamic",
                    "panoptes", "tracking", "ucb1"):
         r = run_scheme(video, workload, tables, scheme, budget=budget,
@@ -133,24 +143,24 @@ def main():
     ap.add_argument("--rotation-speed", type=float, default=400.0)
     ap.add_argument("--pipelined", action="store_true")
     ap.add_argument("--fleet", type=int, default=0,
-                    help="also run the JAX fleet controller (repro.fleet) "
-                         "with this many cameras")
+                    help="also run the unified fleet API "
+                         "(repro.fleet.run_fleet) with this many cameras")
+    ap.add_argument("--provider", choices=PROVIDERS, default="tables",
+                    help="observation provider for --fleet: host tables, "
+                         "device-resident scenes, or the detector network "
+                         "scoring rendered crops in-scan")
     ap.add_argument("--fleet-scene", type=int, default=0,
-                    help="also run a heterogeneous fleet on the "
-                         "device-resident scene substrate (repro."
-                         "scene_jax): per-camera scenes + network traces "
-                         "generated inside the episode scan")
+                    help="[deprecated] alias for "
+                         "`--fleet N --provider scene`")
     ap.add_argument("--fleet-detector", type=int, default=0,
-                    help="also run a fleet with the distilled "
-                         "approximation model in the loop: candidate "
-                         "orientations rendered from the device scene "
-                         "and scored by the detector network inside the "
-                         "episode scan")
+                    help="[deprecated] alias for "
+                         "`--fleet N --provider detector`")
     args = ap.parse_args()
     serve(args.fps, args.duration, seed=args.seed, mbps=args.mbps,
           rtt_ms=args.rtt_ms, rotation_speed=args.rotation_speed,
           pipelined=args.pipelined, fleet=args.fleet,
-          fleet_scene=args.fleet_scene, fleet_detector=args.fleet_detector)
+          provider=args.provider, fleet_scene=args.fleet_scene,
+          fleet_detector=args.fleet_detector)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,13 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import Params, linear, linear_init, rmsnorm, rmsnorm_init
+from repro.models.layers import (
+    Params,
+    linear,
+    linear_init,
+    rmsnorm,
+    rmsnorm_init,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -23,7 +29,8 @@ from repro.models.layers import Params, linear, linear_init, rmsnorm, rmsnorm_in
 def rope_frequencies(head_dim: int, max_seq: int, theta: float = 10000.0,
                      dtype=jnp.float32) -> jnp.ndarray:
     """[max_seq, head_dim//2] angles."""
-    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                      dtype=jnp.float32) / head_dim))
     t = jnp.arange(max_seq, dtype=jnp.float32)
     return jnp.outer(t, inv).astype(dtype)  # [S, D/2]
 
@@ -138,10 +145,14 @@ def gqa_init(key, d_model: int, n_heads: int, n_kv_heads: int,
     head_dim = head_dim or d_model // n_heads
     kq, kk, kv, ko = jax.random.split(key, 4)
     return {
-        "wq": linear_init(kq, d_model, n_heads * head_dim, bias=bias, dtype=dtype),
-        "wk": linear_init(kk, d_model, n_kv_heads * head_dim, bias=bias, dtype=dtype),
-        "wv": linear_init(kv, d_model, n_kv_heads * head_dim, bias=bias, dtype=dtype),
-        "wo": linear_init(ko, n_heads * head_dim, d_model, bias=bias, dtype=dtype),
+        "wq": linear_init(kq, d_model, n_heads * head_dim, bias=bias,
+                          dtype=dtype),
+        "wk": linear_init(kk, d_model, n_kv_heads * head_dim,
+                          bias=bias, dtype=dtype),
+        "wv": linear_init(kv, d_model, n_kv_heads * head_dim,
+                          bias=bias, dtype=dtype),
+        "wo": linear_init(ko, n_heads * head_dim, d_model, bias=bias,
+                          dtype=dtype),
     }
 
 
@@ -185,7 +196,8 @@ def mla_init(key, d_model: int, n_heads: int, *, q_lora_rank: int,
     keys = jax.random.split(key, 8)
     qk_head_dim = qk_nope_dim + qk_rope_dim
     return {
-        "wq_a": linear_init(keys[0], d_model, q_lora_rank, bias=False, dtype=dtype),
+        "wq_a": linear_init(keys[0], d_model, q_lora_rank, bias=False,
+                            dtype=dtype),
         "q_a_norm": rmsnorm_init(q_lora_rank, dtype=dtype),
         "wq_b": linear_init(keys[1], q_lora_rank, n_heads * qk_head_dim,
                             bias=False, dtype=dtype),
@@ -204,7 +216,8 @@ def mla_attention(p: Params, x: jnp.ndarray, *, n_heads: int, qk_nope_dim: int,
                   qk_rope_dim: int, v_head_dim: int, kv_lora_rank: int,
                   angles: jnp.ndarray | None = None, causal: bool = True,
                   impl: str = "xla") -> jnp.ndarray:
-    """Training/prefill-path MLA (latents expanded; cache-path in kvcache.py)."""
+    """Training/prefill-path MLA (latents expanded; cache-path in
+    kvcache.py)."""
     B, S, _ = x.shape
     qk_head_dim = qk_nope_dim + qk_rope_dim
 
@@ -216,7 +229,8 @@ def mla_attention(p: Params, x: jnp.ndarray, *, n_heads: int, qk_nope_dim: int,
     kv_lat = rmsnorm(p["kv_a_norm"], kv_a[..., :kv_lora_rank])
     k_rope = kv_a[..., kv_lora_rank:].reshape(B, S, 1, qk_rope_dim)
 
-    kv = linear(p["wkv_b"], kv_lat).reshape(B, S, n_heads, qk_nope_dim + v_head_dim)
+    kv = linear(p["wkv_b"], kv_lat).reshape(B, S, n_heads,
+                                            qk_nope_dim + v_head_dim)
     k_nope, v = kv[..., :qk_nope_dim], kv[..., qk_nope_dim:]
 
     if angles is not None:
@@ -255,14 +269,16 @@ def window_partition(x: jnp.ndarray, window: int) -> jnp.ndarray:
     return x.reshape(-1, window * window, C)
 
 
-def window_unpartition(wins: jnp.ndarray, window: int, H: int, W: int) -> jnp.ndarray:
+def window_unpartition(wins: jnp.ndarray, window: int, H: int,
+                       W: int) -> jnp.ndarray:
     B = wins.shape[0] // ((H // window) * (W // window))
     x = wins.reshape(B, H // window, W // window, window, window, -1)
     x = x.transpose(0, 1, 3, 2, 4, 5)
     return x.reshape(B, H, W, -1)
 
 
-def shifted_window_mask(H: int, W: int, window: int, shift: int) -> jnp.ndarray:
+def shifted_window_mask(H: int, W: int, window: int,
+                        shift: int) -> jnp.ndarray:
     """Attention bias [nW, window^2, window^2] for shifted windows (Swin)."""
     img = jnp.zeros((1, H, W, 1))
     cnt = 0

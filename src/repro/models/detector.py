@@ -88,7 +88,8 @@ def detector_raw(params: Params, cfg: DetectorConfig, images: jnp.ndarray, *,
 
 
 def decode_boxes(box_raw: jnp.ndarray) -> jnp.ndarray:
-    """[B,g,g,4] raw -> cxcywh in [0,1] (cell-relative center + global size)."""
+    """[B,g,g,4] raw -> cxcywh in [0,1] (cell-relative center + global
+    size)."""
     B, g = box_raw.shape[0], box_raw.shape[1]
     ys, xs = jnp.meshgrid(jnp.arange(g), jnp.arange(g), indexing="ij")
     off = jax.nn.sigmoid(box_raw[..., :2])

@@ -1,4 +1,5 @@
-"""Diffusion training losses + samplers (DDPM for DiT, rectified flow for Flux).
+"""Diffusion training losses + samplers (DDPM for DiT, rectified flow
+for Flux).
 
 The denoising loop runs one backbone forward per sampler step — a 50-step
 sampler is 50 forwards (per the pool note). `sample_*` wraps the loop in
@@ -57,7 +58,8 @@ def dit_sample(params, cfg: DiffusionConfig, key, *, batch: int,
 
     def step(x, i):
         t = ts[i]
-        t_prev = jnp.where(i + 1 < n_steps, ts[jnp.minimum(i + 1, n_steps - 1)], 0)
+        t_prev = jnp.where(i + 1 < n_steps,
+                           ts[jnp.minimum(i + 1, n_steps - 1)], 0)
         ab_t = sched["alpha_bars"][t]
         ab_p = jnp.where(i + 1 < n_steps, sched["alpha_bars"][t_prev], 1.0)
         eps = dit_forward(params, cfg, x.astype(cfg.dtype),

@@ -325,7 +325,8 @@ def mla_prefill(params: Params, cfg: LMConfig, tokens: jnp.ndarray,
     x = embedding(params["embed"], tokens)
 
     def block(lp, x):
-        """Full MLA attention; returns (x, kv_lat [B,S,lora], k_rope [B,S,rope])."""
+        """Full MLA attention; returns (x, kv_lat [B,S,lora],
+        k_rope [B,S,rope])."""
         ap = lp["attn"]
         h = rmsnorm(lp["attn_norm"], x)
         q_lat = rmsnorm(ap["q_a_norm"], linear(ap["wq_a"], h))

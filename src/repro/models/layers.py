@@ -102,7 +102,8 @@ def he_normal(key, shape, fan_in: int | None = None, dtype=jnp.float32):
 def linear_init(key, d_in: int, d_out: int, *, bias: bool = True,
                 std: float | None = None, dtype=jnp.float32) -> Params:
     kw, _ = jax.random.split(key)
-    w = (trunc_normal(kw, (d_in, d_out), std=std, dtype=dtype) if std is not None
+    w = (trunc_normal(kw, (d_in, d_out), std=std, dtype=dtype)
+         if std is not None
          else lecun_normal(kw, (d_in, d_out), dtype=dtype))
     p = {"w": w}
     if bias:
@@ -204,7 +205,8 @@ def conv_init(key, k_h: int, k_w: int, c_in: int, c_out: int, *,
               bias: bool = True, dtype=jnp.float32) -> Params:
     kw, _ = jax.random.split(key)
     fan_in = k_h * k_w * c_in
-    p = {"w": he_normal(kw, (k_h, k_w, c_in, c_out), fan_in=fan_in, dtype=dtype)}
+    p = {"w": he_normal(kw, (k_h, k_w, c_in, c_out), fan_in=fan_in,
+                        dtype=dtype)}
     if bias:
         p["b"] = jnp.zeros((c_out,), dtype=dtype)
     return p
@@ -224,7 +226,8 @@ def conv2d(p: Params, x: jnp.ndarray, *, stride: int = 1,
 # Stacked-layer utilities (scan-over-layers)
 # ---------------------------------------------------------------------------
 
-def stack_init(key, n_layers: int, init_fn: Callable[[jax.Array], Params]) -> Params:
+def stack_init(key, n_layers: int,
+               init_fn: Callable[[jax.Array], Params]) -> Params:
     """Initialize n_layers copies of a layer and stack leaves on axis 0.
 
     The result feeds ``jax.lax.scan`` — one compiled layer body regardless of
@@ -237,7 +240,8 @@ def stack_init(key, n_layers: int, init_fn: Callable[[jax.Array], Params]) -> Pa
 
 def scan_layers(body: Callable, stacked: Params, x, *, extra=None,
                 remat: bool = False, remat_policy: str | None = None):
-    """Run ``body(layer_params, carry, extra) -> carry`` over stacked layers."""
+    """Run ``body(layer_params, carry, extra) -> carry`` over stacked
+    layers."""
     fn = body
     if remat and NO_REMAT:
         remat = False

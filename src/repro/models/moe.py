@@ -49,9 +49,12 @@ def moe_init(key, cfg: LMConfig) -> Params:
         sdff = dff * cfg.moe_shared_experts
         k1, k2, k3 = jax.random.split(ks, 3)
         p["shared"] = {
-            "gate": linear_init(k1, cfg.d_model, sdff, bias=False, dtype=cfg.dtype),
-            "up": linear_init(k2, cfg.d_model, sdff, bias=False, dtype=cfg.dtype),
-            "down": linear_init(k3, sdff, cfg.d_model, bias=False, dtype=cfg.dtype),
+            "gate": linear_init(k1, cfg.d_model, sdff, bias=False,
+                                dtype=cfg.dtype),
+            "up": linear_init(k2, cfg.d_model, sdff, bias=False,
+                              dtype=cfg.dtype),
+            "down": linear_init(k3, sdff, cfg.d_model, bias=False,
+                                dtype=cfg.dtype),
         }
     return p
 

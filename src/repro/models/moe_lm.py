@@ -95,13 +95,15 @@ def moe_lm_forward(params: Params, cfg: LMConfig, tokens: jnp.ndarray, *,
     x = embedding(params["embed"], tokens)
 
     for lp in params["dense_layers"]:
-        h = _attn_apply(lp["attn"], rmsnorm(lp["attn_norm"], x), cfg, angles, impl)
+        h = _attn_apply(lp["attn"], rmsnorm(lp["attn_norm"], x), cfg,
+                        angles, impl)
         x = x + h
         x = x + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x))
 
     def body(lp, carry, extra):
         x, aux = carry
-        h = _attn_apply(lp["attn"], rmsnorm(lp["attn_norm"], x), cfg, extra, impl)
+        h = _attn_apply(lp["attn"], rmsnorm(lp["attn_norm"], x), cfg,
+                        extra, impl)
         x = x + h
         y, metrics = moe.moe_ffn(lp["moe"], rmsnorm(lp["mlp_norm"], x), cfg,
                                  capacity_factor=capacity_factor)
@@ -111,7 +113,9 @@ def moe_lm_forward(params: Params, cfg: LMConfig, tokens: jnp.ndarray, *,
     body_fn = body
     if cfg.remat and not NO_REMAT:
         body_fn = jax.checkpoint(
-            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            body,
+            policy=(jax.checkpoint_policies
+                    .checkpoint_dots_with_no_batch_dims))
 
     def step(carry, lp):
         return body_fn(lp, carry, angles), None

@@ -57,10 +57,14 @@ def swin_block_init(key, dim: int, n_heads: int, window: int,
     return {
         "norm1": layernorm_init(dim, dtype=dtype),
         "attn": {
-            "wq": linear_init(jax.random.fold_in(k1, 0), dim, dim, dtype=dtype),
-            "wk": linear_init(jax.random.fold_in(k1, 1), dim, dim, dtype=dtype),
-            "wv": linear_init(jax.random.fold_in(k1, 2), dim, dim, dtype=dtype),
-            "wo": linear_init(jax.random.fold_in(k1, 3), dim, dim, dtype=dtype),
+            "wq": linear_init(jax.random.fold_in(k1, 0), dim, dim,
+                              dtype=dtype),
+            "wk": linear_init(jax.random.fold_in(k1, 1), dim, dim,
+                              dtype=dtype),
+            "wv": linear_init(jax.random.fold_in(k1, 2), dim, dim,
+                              dtype=dtype),
+            "wo": linear_init(jax.random.fold_in(k1, 3), dim, dim,
+                              dtype=dtype),
         },
         "rel_bias": trunc_normal(k3, (n_bias, n_heads), dtype=dtype),
         "norm2": layernorm_init(dim, dtype=dtype),
@@ -129,7 +133,8 @@ def swin_init(key, cfg: VisionConfig) -> Params:
         "patch_norm": layernorm_init(dims[0], dtype=cfg.dtype),
         "stages": stages,
         "final_norm": layernorm_init(dims[-1], dtype=cfg.dtype),
-        "head": linear_init(keys[-1], dims[-1], cfg.n_classes, dtype=cfg.dtype),
+        "head": linear_init(keys[-1], dims[-1], cfg.n_classes,
+                            dtype=cfg.dtype),
     }
 
 

@@ -59,7 +59,8 @@ def vit_init(key, cfg: VisionConfig, *, img_res: int | None = None) -> Params:
         "cls_token": trunc_normal(kc, (1, 1, cfg.d_model), dtype=cfg.dtype),
         "pos_embed": trunc_normal(kq, (1, n_patches + 1, cfg.d_model),
                                   dtype=cfg.dtype),
-        "layers": stack_init(kl, cfg.n_layers, lambda k: vit_block_init(k, cfg)),
+        "layers": stack_init(kl, cfg.n_layers,
+                             lambda k: vit_block_init(k, cfg)),
         "final_norm": layernorm_init(cfg.d_model, dtype=cfg.dtype),
         "head": linear_init(kh, cfg.d_model, cfg.n_classes, dtype=cfg.dtype),
     }
@@ -74,7 +75,8 @@ def _interp_pos_embed(pos: jnp.ndarray, n_patches: int) -> jnp.ndarray:
     g_old = int(round(n_old ** 0.5))
     g_new = int(round(n_patches ** 0.5))
     grid = grid.reshape(1, g_old, g_old, -1)
-    grid = jax.image.resize(grid, (1, g_new, g_new, grid.shape[-1]), "bilinear")
+    grid = jax.image.resize(grid, (1, g_new, g_new, grid.shape[-1]),
+                            "bilinear")
     return jnp.concatenate([cls, grid.reshape(1, g_new * g_new, -1)], axis=1)
 
 
@@ -88,7 +90,8 @@ def vit_encode(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
     cls = jnp.broadcast_to(params["cls_token"].astype(x.dtype),
                            (B, 1, cfg.d_model))
     x = jnp.concatenate([cls, x], axis=1)
-    x = x + _interp_pos_embed(params["pos_embed"], x.shape[1] - 1).astype(x.dtype)
+    x = x + _interp_pos_embed(params["pos_embed"],
+                              x.shape[1] - 1).astype(x.dtype)
 
     def body(lp, carry, extra):
         return vit_block(lp, carry, cfg, impl)

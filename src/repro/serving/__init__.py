@@ -4,6 +4,11 @@ from repro.serving.accuracy import (
     query_acc_table,
     workload_acc_table,
 )
-from repro.serving.pipeline import ZOOM_LEVELS, RunResult, run_madeye, run_scheme
+from repro.serving.pipeline import (
+    ZOOM_LEVELS,
+    RunResult,
+    run_madeye,
+    run_scheme,
+)
 from repro.serving.teachers import TEACHERS
 from repro.serving.transport import NetworkTrace

@@ -99,99 +99,82 @@ def fleet_topk_cells(labels: jnp.ndarray, k: int = 4):
     return jax.lax.top_k(labels, k)
 
 
+# The three run_fleet_*_controller functions are thin shims over the
+# unified experiment API (repro.fleet.api): each builds a declarative
+# FleetRunSpec for its provider and returns the raw (final FleetState,
+# FleetStepOut) pair it always returned — via prepare_fleet_run +
+# .episode(), so the outputs stay on device with none of run_fleet's
+# host-side summarization. New code should construct FleetRunSpec
+# directly and keep the typed FleetResult.
+
 def run_fleet_controller(video, workload, tables, budget, trace, *,
                          n_cameras: int, mesh=None,
                          approx_miss: float = 0.12,
                          acc_table=None, max_steps: int | None = None):
-    """Drive the full fleet controller (repro.fleet) on a serving
-    substrate — the many-camera analogue of pipeline.run_madeye.
+    """Fleet controller on a prebuilt host serving substrate — the
+    many-camera analogue of pipeline.run_madeye, now a shim over
+    `run_fleet` with the `tables` provider (the prebuilt video/tables/
+    trace objects ride through provider_kwargs). Returns (final
+    FleetState, FleetStepOut stacked over steps)."""
+    from repro.fleet import FleetRunSpec, prepare_fleet_run
 
-    Builds the episode observation tables once on the host, then runs the
-    whole episode as a single jit'd lax.scan over an [n_cameras, n_cells]
-    fleet. With `mesh`, the fleet axis shards over the mesh `data` axis.
-    Returns (final FleetState, FleetStepOut stacked over steps).
-    """
-    from repro.fleet import (
-        build_episode_tables,
-        fleet_config,
-        fleet_statics,
-        init_fleet,
-        run_fleet_episode,
-        workload_spec,
-    )
-    tables_ep = build_episode_tables(
-        video, workload, tables, budget, trace,
-        approx_miss=approx_miss, acc_table=acc_table, max_steps=max_steps)
-    cfg = fleet_config(video.grid, budget)
-    state = init_fleet(video.grid, n_cameras)
-    return run_fleet_episode(cfg, workload_spec(workload),
-                             fleet_statics(video.grid), state, tables_ep,
-                             mesh=mesh)
+    spec = FleetRunSpec.from_objects(
+        "tables", n_cameras=n_cameras, n_steps=max_steps,
+        grid=video.grid, workload=workload, budget=budget,
+        video=video, tables=tables, trace=trace, acc_table=acc_table,
+        approx_miss=approx_miss)
+    return prepare_fleet_run(spec, mesh=mesh).episode()
 
 
 def run_fleet_scene_controller(grid, workload, budget, *, n_cameras: int,
                                n_steps: int, mesh=None, seed: int = 0,
                                **scene_kwargs):
-    """Drive the fleet controller on the device-resident scene substrate —
-    no host materialization: per-camera scenes (repro.scene_jax) advance
-    and are observed inside the jit'd episode scan, so episode length and
-    fleet heterogeneity cost no host work.
+    """Fleet controller on the device-resident scene substrate — a shim
+    over `run_fleet` with the `scene` provider: per-camera scenes
+    (repro.scene_jax) advance and are observed inside the jit'd episode
+    scan, so episode length and fleet heterogeneity cost no host work.
 
     `scene_kwargs` go to fleet.make_scene_provider (scene_seeds,
     person_speed, n_people, mbps, net_seed, ... — scalars broadcast, [F]
     arrays give per-camera heterogeneity). Returns (final FleetState,
     FleetStepOut stacked over steps).
     """
-    from repro.fleet import (
-        fleet_config,
-        fleet_statics,
-        make_scene_provider,
-        run_fleet_episode,
-        workload_spec,
-    )
-    cfg = fleet_config(grid, budget)
-    provider, state = make_scene_provider(
-        grid, workload, cfg, n_cameras=n_cameras, n_steps=n_steps,
-        seed=seed, **scene_kwargs)
-    return run_fleet_episode(cfg, workload_spec(workload),
-                             fleet_statics(grid), state, provider,
-                             mesh=mesh)
+    from repro.fleet import FleetRunSpec, prepare_fleet_run
+
+    spec = FleetRunSpec.from_objects(
+        "scene", n_cameras=n_cameras, n_steps=n_steps, seed=seed,
+        grid=grid, workload=workload, budget=budget, **scene_kwargs)
+    return prepare_fleet_run(spec, mesh=mesh).episode()
 
 
 def run_fleet_detector_controller(grid, workload, budget, *,
                                   n_cameras: int, n_steps: int, mesh=None,
                                   seed: int = 0, det_cfg=None,
                                   det_params=None, **scene_kwargs):
-    """Drive the fleet controller with the distilled approximation model
-    in the loop — the paper's full camera-side pipeline (§3.4): every
-    candidate orientation is *rendered* from the device-resident scene
-    and *scored* by the detector network (models/detector) inside the
-    jit'd episode scan; the controller ranks on those detections instead
-    of precomputed teacher tables. Oracle accuracy still comes from the
-    scene teachers, as backend feedback.
+    """Fleet controller with the approximation model in the loop — a
+    shim over `run_fleet` with the `detector` provider, the paper's full
+    camera-side pipeline (§3.4): every candidate orientation is
+    *rendered* from the device-resident scene and *scored* by the
+    detector network (models/detector) inside the jit'd episode scan;
+    the controller ranks on those detections instead of precomputed
+    teacher tables. Oracle accuracy still comes from the scene teachers,
+    as backend feedback.
 
     det_cfg defaults to the madeye-approx smoke config (64 px crops);
     det_params are initialized from `seed` when not given — pass a
-    distilled checkpoint for a trained camera. `scene_kwargs` go to
-    fleet.make_detector_provider (same scene/network heterogeneity knobs
-    as the scene controller). Returns (final FleetState, FleetStepOut
-    stacked over steps).
+    distilled checkpoint (pytree or .npz path) for a trained camera.
+    `scene_kwargs` go to fleet.make_detector_provider (same
+    scene/network heterogeneity knobs as the scene controller). Returns
+    (final FleetState, FleetStepOut stacked over steps).
     """
-    from repro.fleet import (
-        fleet_config,
-        fleet_statics,
-        make_detector_provider,
-        run_fleet_episode,
-        workload_spec,
-    )
-    cfg = fleet_config(grid, budget)
+    from repro.fleet import FleetRunSpec, prepare_fleet_run
+
     scene_kwargs.setdefault("det_seed", seed)
-    provider, state = make_detector_provider(
-        grid, workload, cfg, n_cameras=n_cameras, n_steps=n_steps,
-        seed=seed, det_cfg=det_cfg, det_params=det_params, **scene_kwargs)
-    return run_fleet_episode(cfg, workload_spec(workload),
-                             fleet_statics(grid), state, provider,
-                             mesh=mesh)
+    spec = FleetRunSpec.from_objects(
+        "detector", n_cameras=n_cameras, n_steps=n_steps, seed=seed,
+        grid=grid, workload=workload, budget=budget,
+        det_cfg=det_cfg, det_params=det_params, **scene_kwargs)
+    return prepare_fleet_run(spec, mesh=mesh).episode()
 
 
 @partial(jax.jit, static_argnames=("k_send",))

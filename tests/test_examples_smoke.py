@@ -23,21 +23,43 @@ EXAMPLES = [
     ("continual_distillation.py",
      {"REPRO_EX_DURATION": "2.0", "REPRO_EX_EVALS": "4"},
      "replay: rank quality"),
+    ("fleet_experiment.py",
+     {"REPRO_EX_CAMERAS": "2", "REPRO_EX_STEPS": "3"},
+     "fleet accuracy"),
 ]
+
+
+def _run(cmd, env_overrides):
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.update(env_overrides)
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=900)
 
 
 @pytest.mark.parametrize("script,overrides,marker", EXAMPLES,
                          ids=[e[0] for e in EXAMPLES])
 def test_example_runs(script, overrides, marker):
-    env = dict(os.environ)
-    env.setdefault("JAX_PLATFORMS", "cpu")
-    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
-        + env.get("PYTHONPATH", "")
-    env.update(overrides)
-    proc = subprocess.run(
-        [sys.executable, os.path.join(REPO, "examples", script)],
-        env=env, capture_output=True, text=True, timeout=900)
+    proc = _run([sys.executable, os.path.join(REPO, "examples", script)],
+                overrides)
     assert proc.returncode == 0, \
         f"{script} failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
     assert marker in proc.stdout, \
         f"{script} did not reach its result line:\n{proc.stdout[-2000:]}"
+
+
+def test_serve_unified_fleet_smoke():
+    """The documented unified entry (`serve --fleet N --provider scene`)
+    runs end to end: a 4-camera heterogeneous scene fleet through
+    run_fleet(FleetRunSpec), exactly as a user would invoke it."""
+    proc = _run([sys.executable, "-m", "repro.launch.serve",
+                 "--fleet", "4", "--provider", "scene",
+                 "--duration", "2", "--fps", "2"], {})
+    assert proc.returncode == 0, \
+        f"serve failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+    line = next((ln for ln in proc.stdout.splitlines()
+                 if ln.startswith("fleet x4") and "[scene]" in ln), None)
+    assert line is not None and "acc=" in line, \
+        f"no unified-fleet result line:\n{proc.stdout[-2000:]}"

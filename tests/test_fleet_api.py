@@ -1,0 +1,220 @@
+"""Unified fleet experiment API (repro.fleet.api).
+
+Pins the declarative surface: FleetRunSpec/FleetResult JSON round trips,
+provider-registry dispatch (unknown names fail loudly, custom providers
+plug in), ShardSpec mesh resolution through the public API, and the
+detector checkpoint path (.npz round trip + trained-vs-demo threshold
+defaults).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import DEFAULT_GRID, Workload
+from repro.core.tradeoff import BudgetConfig
+from repro.fleet import (
+    DEFAULT_QUERIES,
+    FleetResult,
+    FleetRunSpec,
+    ObservationProvider,
+    SceneProvider,
+    ShardSpec,
+    available_providers,
+    fleet_config,
+    load_detector_params,
+    make_detector_provider,
+    make_scene_provider,
+    prepare_fleet_run,
+    provider_factory,
+    register_provider,
+    run_fleet,
+    save_detector_params,
+)
+from repro.fleet import api as api_mod
+
+GRID = DEFAULT_GRID
+BUDGET = BudgetConfig(fps=2.0)
+
+
+# ---------------------------------------------------------------------------
+# spec round trip + object views
+# ---------------------------------------------------------------------------
+
+def test_spec_json_roundtrip():
+    spec = FleetRunSpec(
+        provider="detector", n_cameras=3, n_steps=7, seed=5,
+        budget={"fps": 2.0, "max_send": 3}, grid={"pan_step": 30.0},
+        provider_kwargs={"scene_seeds": [1, 2, 3], "noise": 0.1},
+        shard=ShardSpec(kind="debug", n_data=1))
+    s = spec.to_json()
+    spec2 = FleetRunSpec.from_json(s)
+    assert spec2 == spec
+    assert spec2.to_json() == s
+    assert isinstance(spec2.shard, ShardSpec)
+    # numpy-valued provider kwargs serialize as lists
+    spec3 = dataclasses.replace(
+        spec, provider_kwargs={"scene_seeds": np.arange(3)})
+    spec4 = FleetRunSpec.from_json(spec3.to_json())
+    assert spec4.provider_kwargs["scene_seeds"] == [0, 1, 2]
+
+
+def test_spec_object_views():
+    spec = FleetRunSpec(budget={"fps": 2.0})
+    assert spec.grid_obj() == DEFAULT_GRID
+    assert spec.budget_obj() == BudgetConfig(fps=2.0)
+    wl = spec.workload_obj()
+    assert isinstance(wl, Workload)
+    assert tuple((q.model, q.obj, q.task) for q in wl.queries) \
+        == DEFAULT_QUERIES
+    # from_objects inverts the views
+    spec2 = FleetRunSpec.from_objects(
+        "scene", n_cameras=4, n_steps=8, grid=GRID, workload=wl,
+        budget=BudgetConfig(fps=2.0), churn=0.0)
+    assert spec2.workload == DEFAULT_QUERIES
+    assert spec2.budget_obj() == BudgetConfig(fps=2.0)
+    assert spec2.grid_obj() == GRID
+    assert spec2.provider_kwargs == {"churn": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# registry dispatch
+# ---------------------------------------------------------------------------
+
+def test_registry_unknown_provider_lists_available():
+    with pytest.raises(KeyError) as ei:
+        provider_factory("warp-drive")
+    msg = str(ei.value)
+    for name in ("detector", "scene", "tables"):
+        assert name in msg
+    with pytest.raises(KeyError):
+        run_fleet(FleetRunSpec(provider="warp-drive"))
+
+
+def test_registry_accepts_custom_provider():
+    seen = {}
+
+    def factory(grid, workload, cfg, *, n_cameras, n_steps, seed, **kw):
+        seen["call"] = (n_cameras, n_steps, seed, kw)
+        return make_scene_provider(grid, workload, cfg,
+                                   n_cameras=n_cameras, n_steps=n_steps,
+                                   seed=seed, **kw)
+
+    register_provider("my-scene", factory)
+    try:
+        assert "my-scene" in available_providers()
+        prep = prepare_fleet_run(FleetRunSpec(
+            provider="my-scene", n_cameras=2, n_steps=3, seed=9,
+            provider_kwargs={"churn": 0.0}))
+        assert isinstance(prep.provider, SceneProvider)
+        assert isinstance(prep.provider, ObservationProvider)
+        assert seen["call"] == (2, 3, 9, {"churn": 0.0})
+    finally:
+        del api_mod._PROVIDERS["my-scene"]
+
+
+# ---------------------------------------------------------------------------
+# run_fleet end to end + result round trip
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_result():
+    return run_fleet(FleetRunSpec(
+        provider="scene", n_cameras=2, n_steps=4, budget={"fps": 2.0},
+        provider_kwargs={"scene_seeds": [3, 3]}))
+
+
+def test_run_fleet_result_fields(tiny_result):
+    r = tiny_result
+    assert (r.n_cameras, r.n_steps) == (2, 4)
+    assert len(r.acc_per_step) == 4
+    assert len(r.chosen) == 4 and len(r.chosen[0]) == 2
+    assert len(r.frames_sent) == 4
+    assert 0.0 <= r.accuracy <= 1.0
+    assert r.accuracy == pytest.approx(
+        float(np.mean(r.acc_per_step)), abs=1e-6)
+    # identically-seeded cameras choose in lockstep
+    chosen = np.asarray(r.chosen)
+    np.testing.assert_array_equal(chosen[:, 0], chosen[:, 1])
+    assert r.state is not None and r.out is not None
+    assert r.out.explored.shape[:2] == (4, 2)
+    assert r.timings["episode_s"] > 0 and r.camera_steps_per_s > 0
+
+
+def test_result_json_roundtrip(tiny_result):
+    s = tiny_result.to_json()
+    r2 = FleetResult.from_json(s)
+    assert r2.state is None and r2.out is None
+    assert r2.to_json() == s
+    assert r2.accuracy == pytest.approx(tiny_result.accuracy)
+    assert r2.spec == tiny_result.spec
+    assert r2.chosen == tiny_result.chosen
+
+
+# ---------------------------------------------------------------------------
+# ShardSpec through the public API
+# ---------------------------------------------------------------------------
+
+def test_shard_spec_resolution():
+    assert ShardSpec().build_mesh() is None
+    with pytest.raises(ValueError):
+        ShardSpec(kind="warp").build_mesh()
+    mesh = ShardSpec(kind="debug").build_mesh()
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_run_fleet_sharded_matches_unsharded(tiny_result):
+    sharded = run_fleet(FleetRunSpec(
+        provider="scene", n_cameras=2, n_steps=4, budget={"fps": 2.0},
+        provider_kwargs={"scene_seeds": [3, 3]},
+        shard=ShardSpec(kind="debug")))
+    assert sharded.chosen == tiny_result.chosen
+    assert sharded.frames_sent == tiny_result.frames_sent
+
+
+# ---------------------------------------------------------------------------
+# detector checkpoints (.npz) + threshold defaults
+# ---------------------------------------------------------------------------
+
+def test_detector_params_npz_roundtrip(tmp_path):
+    from repro.configs import get_smoke_config
+    from repro.models.detector import detector_init
+
+    det_cfg = get_smoke_config("madeye-approx")
+    params = detector_init(jax.random.PRNGKey(7), det_cfg)
+    path = save_detector_params(str(tmp_path / "det.npz"), params)
+    loaded = load_detector_params(path)
+    assert jax.tree.structure(loaded) == jax.tree.structure(params)
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    cfg = fleet_config(GRID, BUDGET)
+    wl = FleetRunSpec().workload_obj()
+    # undistilled demo net: thresholds sit inside a fresh net's score
+    # range; a trained checkpoint (pytree OR path) gets the 0.5 default
+    fresh, _ = make_detector_provider(GRID, wl, cfg, n_cameras=1,
+                                      n_steps=2)
+    assert float(fresh.thresh[0]) == pytest.approx(0.3)
+    from_path, _ = make_detector_provider(GRID, wl, cfg, n_cameras=1,
+                                          n_steps=2, det_params=path)
+    assert float(from_path.thresh[0]) == pytest.approx(0.5)
+    assert float(from_path.geo_thresh) == pytest.approx(0.55)
+    from_tree, _ = make_detector_provider(GRID, wl, cfg, n_cameras=1,
+                                          n_steps=2, det_params=params)
+    for a, b in zip(jax.tree.leaves(from_path.det_params),
+                    jax.tree.leaves(from_tree.det_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_save_detector_params_rejects_non_contract(tmp_path):
+    """Anything outside 'nested dicts of arrays with clean keys' fails
+    at save time instead of loading back as a different treedef."""
+    bad = str(tmp_path / "bad.npz")
+    with pytest.raises(TypeError):
+        save_detector_params(bad, np.zeros(3))          # non-dict root
+    with pytest.raises(ValueError):
+        save_detector_params(bad, {"a/b": np.zeros(3)})  # '/' in key
+    with pytest.raises(TypeError):
+        save_detector_params(bad, {"a": [1, 2, 3]})      # non-array leaf

@@ -202,6 +202,84 @@ def test_fleet_network_traces_shapes():
 
 
 # ---------------------------------------------------------------------------
+# unified entry (run_fleet / FleetRunSpec) vs the pre-refactor entries
+# ---------------------------------------------------------------------------
+
+def _assert_same_decisions(out_a, out_b):
+    for name in DECISION_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out_a, name)),
+            np.asarray(getattr(out_b, name)), err_msg=name)
+
+
+def test_unified_entry_matches_legacy_tables_entry(substrate):
+    """run_fleet(tables spec) == engine.run_fleet_controller == the
+    runner-level run_fleet_episode over hand-built EpisodeTables,
+    step for step on the pinned seed-3 substrate."""
+    from repro.fleet import FleetRunSpec, run_fleet
+    from repro.serving.engine import run_fleet_controller
+
+    video, tables, acc, trace, ep = substrate
+    cfg = fleet_config(GRID, BUDGET)
+    st = init_fleet(GRID, 2)
+    _, out_runner = run_fleet_episode(cfg, workload_spec(WORKLOAD),
+                                      fleet_statics(GRID), st, ep)
+    _, out_engine = run_fleet_controller(video, WORKLOAD, tables, BUDGET,
+                                         trace, n_cameras=2,
+                                         acc_table=acc)
+    res = run_fleet(FleetRunSpec.from_objects(
+        "tables", n_cameras=2, grid=GRID, workload=WORKLOAD,
+        budget=BUDGET, video=video, tables=tables, trace=trace,
+        acc_table=acc))
+    _assert_same_decisions(out_runner, out_engine)
+    _assert_same_decisions(out_runner, res.out)
+
+
+def test_unified_entry_matches_legacy_scene_entry():
+    """run_fleet(scene spec) == engine.run_fleet_scene_controller ==
+    make_scene_provider + run_fleet_episode, step for step (pinned
+    scene seeds)."""
+    from repro.fleet import FleetRunSpec, run_fleet
+    from repro.serving.engine import run_fleet_scene_controller
+
+    kw = dict(n_cameras=2, n_steps=8, seed=11, scene_seeds=[4, 7])
+    cfg = fleet_config(GRID, BUDGET)
+    provider, st0 = make_scene_provider(GRID, WORKLOAD, cfg, **kw)
+    _, out_runner = run_fleet_episode(cfg, workload_spec(WORKLOAD),
+                                      fleet_statics(GRID), st0, provider)
+    _, out_engine = run_fleet_scene_controller(GRID, WORKLOAD, BUDGET,
+                                               **kw)
+    res = run_fleet(FleetRunSpec.from_objects(
+        "scene", grid=GRID, workload=WORKLOAD, budget=BUDGET, **kw))
+    _assert_same_decisions(out_runner, out_engine)
+    _assert_same_decisions(out_runner, res.out)
+    # the typed result summarizes the same episode
+    np.testing.assert_array_equal(
+        np.asarray(res.chosen), np.asarray(out_runner.chosen))
+    assert res.accuracy == pytest.approx(
+        float(np.asarray(out_runner.acc_chosen).mean()))
+
+
+def test_unified_entry_matches_legacy_detector_entry():
+    """run_fleet(detector spec) == engine.run_fleet_detector_controller
+    == make_detector_provider + run_fleet_episode, step for step."""
+    from repro.fleet import FleetRunSpec, make_detector_provider, run_fleet
+    from repro.serving.engine import run_fleet_detector_controller
+
+    kw = dict(n_cameras=1, n_steps=4, seed=0, scene_seeds=[5])
+    cfg = fleet_config(GRID, BUDGET)
+    provider, st0 = make_detector_provider(GRID, WORKLOAD, cfg, **kw)
+    _, out_runner = run_fleet_episode(cfg, workload_spec(WORKLOAD),
+                                      fleet_statics(GRID), st0, provider)
+    _, out_engine = run_fleet_detector_controller(GRID, WORKLOAD, BUDGET,
+                                                  **kw)
+    res = run_fleet(FleetRunSpec.from_objects(
+        "detector", grid=GRID, workload=WORKLOAD, budget=BUDGET, **kw))
+    _assert_same_decisions(out_runner, out_engine)
+    _assert_same_decisions(out_runner, res.out)
+
+
+# ---------------------------------------------------------------------------
 # randomized unit parity for the batched shape ops + walk
 # ---------------------------------------------------------------------------
 
