@@ -1,15 +1,23 @@
 """In-step approximation model: render+infer cost per camera-step.
 
-The DetectorProvider closes the paper's camera-side loop — every
-candidate (cell, zoom) crop is rasterized from the device scene and
-scored by the distilled detector network *inside* the jit'd episode scan
-(scene_jax.render + models/detector via serving.engine). That buys
-fidelity (the ranking sees actual pixels, §3.4) at the price of N*Z
-renders + forward passes per camera-step. This benchmark runs the
-detector-backed and the oracle (teacher-table rasterizer) scene episodes
-on identical worlds at each fleet size and reports steady-state
-camera-steps/sec for both, the detector path's overhead factor, and the
-marginal render+infer cost per camera-step.
+The DetectorProvider closes the paper's camera-side loop — candidate
+(cell, zoom) crops are rasterized from the device scene and scored by
+the distilled detector network *inside* the jit'd episode scan. This
+benchmark runs four pipelines on identical worlds at each fleet size:
+
+  oracle   the teacher-table scene episode (no in-scan render+infer) —
+           the cost floor everything is measured against
+  legacy   the pre-shortlist reference: every N*Z window rendered to
+           pixels, scored through a serial per-chunk lax.map
+  fast     the fused exhaustive path: same N*Z windows, but crops go
+           straight to patch-embedding tokens (kernels/crop_patchify)
+           and ONE batched forward over the flattened [F*K] axis
+  short    the candidate-sparse path: the search-coupled shortlist
+           keeps <= 25% of the windows before the fused forward
+
+and reports steady-state camera-steps/sec per leg, each leg's overhead
+factor over the oracle, and the two headline ratios: batching+fusion
+alone (legacy/fast at K = N*Z) and the full fast path (legacy/short).
 
   PYTHONPATH=src python -m benchmarks.bench_detector_step
 """
@@ -24,6 +32,7 @@ FLEET_SIZES = (64, 256)
 N_STEPS = 4
 FPS = 3.0
 SEED = 3
+SHORT_FRAC = 0.25
 
 
 def _workload():
@@ -33,6 +42,8 @@ def _workload():
 
 def run(fleet_sizes=FLEET_SIZES, n_steps: int = N_STEPS,
         quick: bool | None = None) -> dict:
+    import dataclasses
+
     import jax
 
     from repro.core import DEFAULT_GRID
@@ -50,17 +61,32 @@ def run(fleet_sizes=FLEET_SIZES, n_steps: int = N_STEPS,
 
     out = {"steps": n_steps, "fleets": list(fleet_sizes)}
     for f in fleet_sizes:
-        prep = prepare_fleet_run(FleetRunSpec.from_objects(
-            "detector", n_cameras=f, n_steps=n_steps, seed=SEED,
+        base = dict(
+            n_cameras=f, n_steps=n_steps, seed=SEED,
             grid=grid, workload=wl, budget=budget,
             scene_seeds=np.arange(f),
             person_speed=np.linspace(0.8, 2.0, f),
-            n_people=np.linspace(4, 14, f).astype(int)))
+            n_people=np.linspace(4, 14, f).astype(int))
+        prep = prepare_fleet_run(FleetRunSpec.from_objects(
+            "detector", **base))
+        c = prep.provider.scene.windows.shape[0]
+        z = len(prep.cfg.zoom_levels)
+        k_short = max(z, int(c * SHORT_FRAC) // z * z)
+        out["windows"] = c
+        out["shortlist_k"] = k_short
+
         legs = {}
-        # the oracle leg reuses the detector provider's own scene — the
-        # identical world, minus the in-scan render+infer
-        for name, provider in (("det", prep.provider),
-                               ("oracle", prep.provider.scene)):
+        # every leg reuses the ONE built provider's scene — the
+        # identical world: `short`/`legacy` are static-field variants
+        # (shortlist_k / fused are treedef metadata, no rebuild),
+        # `oracle` is the scene minus the in-scan render+infer
+        for name, provider in (
+                ("fast", prep.provider),
+                ("short", dataclasses.replace(prep.provider,
+                                              shortlist_k=k_short)),
+                ("legacy", dataclasses.replace(prep.provider,
+                                               fused=False)),
+                ("oracle", prep.provider.scene)):
             t0 = time.perf_counter()
             jax.block_until_ready(prep.episode(provider=provider))
             compile_s = time.perf_counter() - t0
@@ -70,15 +96,25 @@ def run(fleet_sizes=FLEET_SIZES, n_steps: int = N_STEPS,
             legs[name] = (compile_s, scan_s, o)
 
         cps = f * n_steps
-        det_scan, oracle_scan = legs["det"][1], legs["oracle"][1]
-        out[f"det_cps_{f}"] = float(cps / det_scan)
+        oracle_scan = legs["oracle"][1]
+        for name in ("fast", "short", "legacy"):
+            scan = legs[name][1]
+            out[f"det_{name}_cps_{f}"] = float(cps / scan)
+            out[f"det_{name}_overhead_{f}"] = float(scan / oracle_scan)
         out[f"oracle_cps_{f}"] = float(cps / oracle_scan)
-        out[f"det_overhead_{f}"] = float(det_scan / oracle_scan)
+        # headline metrics: the default provider config (fused
+        # exhaustive) keeps the historical det_cps/det_overhead names
+        out[f"det_cps_{f}"] = out[f"det_fast_cps_{f}"]
+        out[f"det_overhead_{f}"] = out[f"det_fast_overhead_{f}"]
+        out[f"batch_fusion_speedup_{f}"] = float(
+            legs["legacy"][1] / legs["fast"][1])
+        out[f"shortlist_speedup_{f}"] = float(
+            legs["legacy"][1] / legs["short"][1])
         out[f"render_infer_us_per_camera_step_{f}"] = float(
-            max(det_scan - oracle_scan, 0.0) / cps * 1e6)
-        out[f"det_compile_s_{f}"] = float(legs["det"][0])
+            max(legs["fast"][1] - oracle_scan, 0.0) / cps * 1e6)
+        out[f"det_compile_s_{f}"] = float(legs["fast"][0])
         out[f"mean_shape_{f}"] = float(
-            np.asarray(legs["det"][2].n_explored, float).mean())
+            np.asarray(legs["fast"][2].n_explored, float).mean())
     return out
 
 

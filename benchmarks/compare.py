@@ -5,8 +5,10 @@ committed baseline (BENCH_repro.quick.json): any metric whose wall time
 grew by more than --max-slowdown fails the job. Metrics present in only
 one of the two files are *skipped*, not failed: a fresh-only metric
 (`new`) is how a newly-landed benchmark looks before its baseline is
-committed, and a baseline-only metric (`removed`) is how a renamed or
-retired benchmark looks before the baseline is regenerated — both are
+committed, and a baseline-only metric (`removed`) is how a renamed,
+retired, or input-starved benchmark looks (run.py records no row when a
+benchmark declines to run, e.g. bench_roofline without its dry-run
+artifacts) before the baseline is regenerated — both are
 reported so a PR reviewer sees the coverage change, neither can KeyError
 or block the job.
 

@@ -41,6 +41,13 @@ def main() -> None:
         t0 = time.perf_counter()
         out = fn()
         dt = (time.perf_counter() - t0) * 1e6
+        if out is None:
+            # the benchmark declined to run (missing input artifacts,
+            # e.g. bench_roofline without a dry-run RESULTS file):
+            # record nothing rather than a meaningless row — compare.py
+            # reports the absent metric as removed without failing
+            print(f"[skipped] {name}: no measurement recorded")
+            return None
         rows.append({"name": name, "us_per_call": dt,
                      "derived": derive(out)})
         return out
@@ -54,7 +61,9 @@ def main() -> None:
                         f"@{o['cameras']}x{o['steps']}")
         timed("detector_in_step",
               lambda: bench_detector_step.run(quick=True),
-              lambda o: f"det_cps={o['det_cps_8']:.0f}@8x{o['steps']}")
+              lambda o: f"det_cps={o['det_cps_8']:.0f} "
+                        f"short_cps={o['det_short_cps_8']:.0f}"
+                        f"@8x{o['steps']}")
     else:
         timed("fig1_2_orientation_gains", bench_orientation_gains.run,
               lambda o: f"dyn_over_fixed=+{o['dyn_over_fixed']*100:.1f}%")
@@ -77,9 +86,10 @@ def main() -> None:
               lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
                         f"@{o['cameras']}x{o['steps']}")
         timed("detector_in_step", bench_detector_step.run,
-              lambda o: f"det_cps64={o['det_cps_64']:.0f} "
-                        f"det_cps256={o['det_cps_256']:.0f} "
-                        f"overhead={o['det_overhead_256']:.1f}x")
+              lambda o: f"det_cps256={o['det_cps_256']:.0f} "
+                        f"short_cps256={o['det_short_cps_256']:.0f} "
+                        f"overhead={o['det_short_overhead_256']:.1f}x "
+                        f"fusion={o['batch_fusion_speedup_256']:.2f}x")
         timed("roofline_single", lambda: bench_roofline.run("single"),
               lambda o: f"cells={len(o)}")
         timed("roofline_multi", lambda: bench_roofline.run("multi"),

@@ -50,6 +50,7 @@ from repro.fleet.runner import (
     run_fleet_episode,
     save_detector_params,
     shard_fleet,
+    shortlist_windows,
 )
 from repro.fleet.api import (
     DEFAULT_QUERIES,

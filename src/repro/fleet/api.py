@@ -191,6 +191,13 @@ class FleetRunSpec:
     grid: dict = field(default_factory=dict)    # OrientationGrid overrides
     provider_kwargs: dict = field(default_factory=dict)
     shard: ShardSpec | None = None
+    # candidate-sparse fast path: how many of the N*Z windows each
+    # camera renders + scores per step (providers that run a per-window
+    # model honor it — `detector` does; None = provider default, i.e.
+    # exhaustive). First-class rather than a provider_kwarg because it
+    # is THE accuracy-vs-cost knob a sweep varies (paper §3.3's
+    # "fruitful subset").
+    shortlist_k: int | None = None
 
     def __post_init__(self):
         object.__setattr__(
@@ -216,6 +223,7 @@ class FleetRunSpec:
                      workload: Workload | None = None,
                      budget: BudgetConfig | None = None,
                      shard: ShardSpec | None = None,
+                     shortlist_k: int | None = None,
                      **provider_kwargs) -> "FleetRunSpec":
         """Build a spec from the in-memory config objects the rest of
         the codebase passes around (the engine shims do)."""
@@ -226,7 +234,8 @@ class FleetRunSpec:
                 (q.model, q.obj, q.task) for q in workload.queries),
             grid={} if grid is None else dataclasses.asdict(grid),
             budget={} if budget is None else dataclasses.asdict(budget),
-            provider_kwargs=provider_kwargs, shard=shard)
+            provider_kwargs=provider_kwargs, shard=shard,
+            shortlist_k=shortlist_k)
 
     # -- JSON round trip ------------------------------------------------
     def to_json(self, **dumps_kwargs) -> str:
@@ -272,11 +281,15 @@ def prepare_fleet_run(spec: FleetRunSpec, *, mesh=None) -> PreparedFleetRun:
     workload = spec.workload_obj()
     cfg = fleet_config(grid, spec.budget_obj())
     factory = provider_factory(spec.provider)
+    kwargs = dict(spec.provider_kwargs)
+    if spec.shortlist_k is not None:
+        # first-class fast-path knob; factories that don't take it (the
+        # tables/scene providers have no per-window model) fail loudly
+        kwargs["shortlist_k"] = spec.shortlist_k
     t0 = time.perf_counter()
     provider, state = factory(
         grid, workload, cfg, n_cameras=spec.n_cameras,
-        n_steps=spec.n_steps, seed=spec.seed,
-        **dict(spec.provider_kwargs))
+        n_steps=spec.n_steps, seed=spec.seed, **kwargs)
     build_s = time.perf_counter() - t0
     if mesh is None and spec.shard is not None:
         mesh = spec.shard.build_mesh()

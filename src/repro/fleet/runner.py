@@ -24,14 +24,20 @@ step consumes. Three providers ship in the registry:
     reproducible and independent of fleet size or shard layout.
 
   * `DetectorProvider` (`detector`) — the scene path with the
-    approximation model in the loop (paper §3.4): every candidate
-    (cell, zoom) crop is *rendered* from the scene (scene_jax.render)
-    and *scored* by the detector network (models/detector via
-    serving.engine) inside the scanned step; the controller ranks on
-    those detections, the oracle teachers only grade what it chose
-    (acc_true). Detector params ride in the scan carry so a future
-    in-scan distillation step can update them; render noise keys fold
-    from the same per-camera keys as the scene, so decisions stay
+    approximation model in the loop (paper §3.4): candidate (cell,
+    zoom) crops are *rendered* from the scene and *scored* by the
+    detector network (models/detector via serving.engine) inside the
+    scanned step; the controller ranks on those detections, the oracle
+    teachers only grade what it chose (acc_true). The default pipeline
+    is candidate-sparse and fused: a search-coupled shortlist keeps the
+    `shortlist_k` windows reachable by the shape search / top-EWMA
+    cells, kernels/crop_patchify rasterizes the survivors directly into
+    ViT patch embeddings, and one batched forward over the flattened
+    [F*K] axis scores them (shortlist_k = N*Z is exhaustive and
+    bit-identical to the retained fused=False chunked reference).
+    Detector params ride in the scan carry so a future in-scan
+    distillation step can update them; render noise keys fold from the
+    same per-camera keys as the scene, so decisions stay
     fleet-size/shard independent.
 
 Each provider registers as a jax pytree whose static configuration
@@ -55,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ewma
 from repro.core.rank import Workload
 from repro.core.tradeoff import BudgetConfig
 from repro.fleet.state import (
@@ -62,6 +69,7 @@ from repro.fleet.state import (
     FleetState,
     FleetStatics,
     WorkloadSpec,
+    fleet_statics,
     workload_spec,
 )
 from repro.fleet.step import FleetObs, FleetStepOut, fleet_step
@@ -180,20 +188,78 @@ class SceneProvider:
             params=shard_fleet(self.params, mesh))
 
 
+def shortlist_windows(cfg: FleetConfig, state: FleetState,
+                      neighbor8: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Search-coupled candidate shortlist: the [F, K] flattened window
+    ids (cell * Z + zoom) worth rendering + scoring this step.
+
+    The shape search only ever explores cells reachable from the
+    camera's current state (paper §3.3): the carried shape itself, its
+    8-neighbor ring (evolve/resize grow into it), and the top-EWMA cells
+    (reseed and scout jump there). Cells are ranked by exactly that
+    reachability — shape > ring > normalized EWMA label, with the scout
+    rule's sqrt-staleness bonus as the tiebreak — and the top K/Z cells
+    contribute all Z zoom windows each. Pure per-camera function of
+    (state, grid statics): deterministic, fleet-size/shard independent
+    (the same key discipline as the scene streams). lax.top_k breaks
+    ties toward the lower cell id, so the selection is stable.
+    """
+    z = len(cfg.zoom_levels)
+    if k <= 0 or k % z != 0:
+        raise ValueError(f"shortlist k={k} must be a positive multiple "
+                         f"of the {z} zoom levels (whole cells)")
+    kc = k // z
+    labels = ewma.labels(state.ewma, delta_weight=cfg.delta_weight)
+    lnorm = labels / jnp.maximum(
+        jnp.max(labels, axis=-1, keepdims=True), 1e-9)
+    stale = jnp.sqrt(jnp.maximum(
+        (state.step_idx[:, None] - state.last_visit).astype(jnp.float32),
+        0.0))
+    shape = state.shape
+    ring = (shape.astype(jnp.float32) @ neighbor8.astype(jnp.float32)) > 0
+    score = (4.0 * shape + 2.0 * (ring & ~shape)
+             + lnorm + 1e-3 * stale)
+    _, cells = jax.lax.top_k(score, kc)                     # [F, Kc]
+    return (cells[:, :, None] * z
+            + jnp.arange(z, dtype=cells.dtype)[None, None, :]
+            ).reshape(cells.shape[0], kc * z)
+
+
 @dataclass(frozen=True)
 class DetectorProvider:
     """Scene-backed provider with the approximation model in the loop:
     candidate-orientation crops are rendered and scored by the detector
     network inside the scanned step. Build with `make_detector_provider`
     (pass a distilled checkpoint — pytree or .npz path — for a trained
-    camera)."""
+    camera).
+
+    Two pipelines share the observation contract:
+
+      * fused=True (default) — the candidate-sparse fast path: a
+        search-coupled shortlist keeps the top `shortlist_k` of the N*Z
+        windows per camera (shortlist_k = N*Z reproduces exhaustive
+        scoring bit-for-bit), kernels/crop_patchify turns the survivors
+        straight into patch-embedding tokens (Pallas kernel via
+        use_kernel; crops never hit HBM as pixels), and ONE batched
+        forward over the flattened [F*K] axis scores them
+        (engine.detector_scores_tokens).
+      * fused=False — the pre-shortlist reference: every window rendered
+        to pixels and scored through a serial per-chunk lax.map. Kept
+        exhaustive-only, as the bit-exact anchor the fast path's parity
+        tests pin against.
+    """
     scene: SceneProvider        # world + teachers (oracle feedback)
     det_cfg: object             # DetectorConfig (hashable, jit-static)
     det_params: object          # detector pytree (scan carry)
     thresh: jnp.ndarray         # [P] per-pair score threshold
     geo_thresh: jnp.ndarray     # [] score floor for zoom geometry
     noise: jnp.ndarray          # [] render noise scale
-    chunk: int                  # windows per render+infer slab (static)
+    nbr8: jnp.ndarray           # [N, N] 8-neighbor mask (shortlist ring)
+    chunk: int                  # windows per slab (static; fused=False)
+    shortlist_k: int = 0        # windows scored per camera (0 = all)
+    fused: bool = True          # fast path vs reference chunk loop
+    use_kernel: bool = False    # Pallas crop_patchify vs jnp reference
+    kernel_interpret: bool = True
 
     @property
     def n_steps(self) -> int:
@@ -210,16 +276,12 @@ class DetectorProvider:
 
     def observe(self, cfg: FleetConfig, wl: WorkloadSpec, carry,
                 state: FleetState, xs):
-        from repro.serving.engine import detector_scores
-
         sc, dp = carry
         mbps_t, rtt_t = xs
         p = self.scene
         kinds = jnp.asarray(kind_mask(p.spec))
         pair_cls = jnp.asarray(wl.pair_cls, jnp.int32)
         res = self.det_cfg.img_res
-        c = p.windows.shape[0]
-        wchunks = p.windows.reshape(c // self.chunk, self.chunk, 4)
 
         sc = advance_scene(p.spec, p.params, state.rng, sc,
                            state.step_idx, p.stride)
@@ -233,20 +295,10 @@ class DetectorProvider:
                               cam_salt=state.rng[:, 0])
         noise_img = render_noise(state.rng, frame, res) * self.noise
 
-        def score_chunk(wc):
-            crops = render_fleet_crops(sc.pos, sc.size, kinds, sc.oid, wc,
-                                       res=res,
-                                       min_visible=p.spec.min_visible,
-                                       noise=noise_img)
-            return jax.vmap(
-                lambda im: detector_scores(dp, self.det_cfg, im))(crops)
-
-        # slab the N*Z candidate windows so peak memory is
-        # [F, chunk, res, res, 3] instead of all crops at once
-        dets = jax.lax.map(score_chunk, wchunks)
-        dets = jax.tree.map(
-            lambda x: jnp.moveaxis(x, 0, 1).reshape(
-                (x.shape[1], c) + x.shape[3:]), dets)
+        if self.fused:
+            dets = self._score_fused(cfg, state, sc, dp, kinds, noise_img)
+        else:
+            dets = self._score_chunked(sc, dp, kinds, noise_img, p, res)
         do = detections_obs(dets, p.windows, pair_cls, self.thresh,
                             self.geo_thresh, o.acc_true,
                             n_zoom=len(cfg.zoom_levels))
@@ -256,9 +308,69 @@ class DetectorProvider:
                        acc_true=do.acc_true, mbps=mbps_t, rtt=rtt_t)
         return (sc, dp), obs
 
+    def _score_fused(self, cfg, state, sc, dp, kinds, noise_img):
+        """Shortlist -> fused crop->token kernel -> one [F*K] forward,
+        detections scattered back to the full window axis."""
+        from repro.kernels.crop_patchify.ops import crop_patchify
+        from repro.serving.engine import detector_scores_tokens
+
+        p = self.scene
+        c = p.windows.shape[0]
+        k = self.shortlist_k if 0 < self.shortlist_k < c else c
+        if k < c:
+            widx = shortlist_windows(cfg, state, self.nbr8, k)
+            wins = p.windows[widx]                          # [F, K, 4]
+        else:
+            wins = p.windows                                # shared [C, 4]
+        tokens = crop_patchify(
+            sc.pos, sc.size, kinds, sc.oid, wins,
+            dp["backbone"]["vit"]["patch_embed"],
+            patch=self.det_cfg.patch, res=self.det_cfg.img_res,
+            min_visible=p.spec.min_visible, noise=noise_img,
+            dtype=self.det_cfg.dtype,
+            block_k=_auto_chunk(k, self.chunk),
+            use_kernel=self.use_kernel,
+            interpret=self.kernel_interpret)                # [F, K, gg, D]
+        f = tokens.shape[0]
+        dets = detector_scores_tokens(
+            dp, self.det_cfg,
+            tokens.reshape((f * k,) + tokens.shape[2:]))
+        dets = jax.tree.map(
+            lambda x: x.reshape((f, k) + x.shape[1:]), dets)
+        if k < c:
+            # un-shortlisted windows read as score-0 detections (empty
+            # under any positive threshold), so detections_obs and the
+            # step consume the same full [F, C] axis either way
+            arange_f = jnp.arange(f)[:, None]
+            dets = jax.tree.map(
+                lambda x: jnp.zeros((f, c) + x.shape[2:], x.dtype)
+                .at[arange_f, widx].set(x), dets)
+        return dets
+
+    def _score_chunked(self, sc, dp, kinds, noise_img, p, res):
+        """Pre-shortlist reference: serial lax.map over window chunks,
+        peak memory [F, chunk, res, res, 3] — the bit-exact anchor."""
+        from repro.serving.engine import detector_scores
+
+        c = p.windows.shape[0]
+        wchunks = p.windows.reshape(c // self.chunk, self.chunk, 4)
+
+        def score_chunk(wc):
+            crops = render_fleet_crops(sc.pos, sc.size, kinds, sc.oid, wc,
+                                       res=res,
+                                       min_visible=p.spec.min_visible,
+                                       noise=noise_img)
+            return jax.vmap(
+                lambda im: detector_scores(dp, self.det_cfg, im))(crops)
+
+        dets = jax.lax.map(score_chunk, wchunks)
+        return jax.tree.map(
+            lambda x: jnp.moveaxis(x, 0, 1).reshape(
+                (x.shape[1], c) + x.shape[3:]), dets)
+
     def shard(self, mesh):
         # scene state/params shard with the fleet; detector params are
-        # fleet-shared and replicate
+        # fleet-shared and replicate (as is the nbr8 grid geometry)
         return dataclasses.replace(self, scene=self.scene.shard(mesh))
 
 
@@ -271,8 +383,10 @@ jax.tree_util.register_dataclass(
     meta_fields=["spec", "stride"])
 jax.tree_util.register_dataclass(
     DetectorProvider,
-    data_fields=["scene", "det_params", "thresh", "geo_thresh", "noise"],
-    meta_fields=["det_cfg", "chunk"])
+    data_fields=["scene", "det_params", "thresh", "geo_thresh", "noise",
+                 "nbr8"],
+    meta_fields=["det_cfg", "chunk", "shortlist_k", "fused", "use_kernel",
+                 "kernel_interpret"])
 
 
 def build_episode_tables(video, workload: Workload, tables: dict,
@@ -495,13 +609,28 @@ def load_detector_params(path: str) -> dict:
     return out
 
 
+def _auto_chunk(n_windows: int, default: int) -> int:
+    """Largest divisor of n_windows that is <= default (>= 1). The
+    auto-selected render+infer slab for the chunked reference path: on
+    grids where the one-cell-row default does not divide N*Z, walk down
+    to the nearest divisor instead of silently slabbing unevenly."""
+    chunk = max(1, min(default, n_windows))
+    while n_windows % chunk != 0:
+        chunk -= 1
+    return chunk
+
+
 def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
                            n_cameras: int, n_steps: int,
                            det_cfg=None, det_params=None,
                            det_seed: int = 0, thresh=None,
                            geo_thresh: float | None = None,
                            noise: float = 0.05,
-                           chunk: int | None = None, **scene_kwargs
+                           chunk: int | None = None,
+                           shortlist_k: int | None = None,
+                           fused: bool = True,
+                           use_kernel: bool = False,
+                           kernel_interpret: bool = True, **scene_kwargs
                            ) -> tuple[DetectorProvider, FleetState]:
     """Scene provider + the approximation detector scored in-step.
 
@@ -514,11 +643,19 @@ def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
     None it adapts to the params source — 0.3 for the undistilled demo
     (inside a fresh net's score range, so counts stay scene-dependent),
     0.5 for a trained checkpoint — and `geo_thresh` (zoom-geometry score
-    floor) follows the same rule at +0.05. `chunk` bounds how many of
-    the N*Z candidate windows are rendered + scored at once inside the
-    step (peak-memory knob; must divide N*Z, default one cell-row of
-    zooms at a time). `scene_kwargs` are make_scene_provider's
-    heterogeneity knobs.
+    floor) follows the same rule at +0.05.
+
+    Fast-path knobs: `shortlist_k` caps how many of the N*Z candidate
+    windows are rendered + scored per camera per step (the
+    search-coupled shortlist — must be a multiple of the zoom count;
+    None/N*Z scores everything, reproducing exhaustive behavior
+    bit-for-bit); `fused` picks the candidate-sparse fused pipeline
+    (default) vs the pre-shortlist chunked reference; `use_kernel` /
+    `kernel_interpret` dispatch the fused crop->token stage to the
+    Pallas crop_patchify kernel (TPU) instead of the jnp reference.
+    `chunk` bounds the reference path's render+infer slab (must divide
+    N*Z, default one cell-row of zooms at a time — `_auto_chunk`).
+    `scene_kwargs` are make_scene_provider's heterogeneity knobs.
     """
     from repro.configs import get_smoke_config
     from repro.models.detector import detector_init
@@ -539,21 +676,43 @@ def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
         **scene_kwargs)
     n_pairs = len(workload_spec(workload).pairs)
     c = scene.windows.shape[0]
+    z = len(cfg.zoom_levels)
     if chunk is None:
-        chunk = len(cfg.zoom_levels) * max(1, cfg.n_pan)
-        while c % chunk != 0:       # odd grids: largest divisor <= default
-            chunk -= 1
+        chunk = _auto_chunk(c, z * max(1, cfg.n_pan))
     elif c % chunk != 0:
         raise ValueError(
             f"chunk={chunk} must divide the {c} candidate windows "
             f"(n_cells * n_zoom) — a non-dividing slab would silently "
             f"fall back to rendering all windows at once")
+    if shortlist_k is None:
+        shortlist_k = c
+    elif not (0 < shortlist_k <= c) or shortlist_k % z != 0:
+        raise ValueError(
+            f"shortlist_k={shortlist_k} must be a multiple of the "
+            f"{z} zoom levels in [{z}, {c}] — the shortlist keeps whole "
+            f"cells (all zooms of a kept cell are scored)")
+    if not fused and shortlist_k < c:
+        raise ValueError(
+            "the chunked reference path (fused=False) is exhaustive-"
+            f"only; drop shortlist_k={shortlist_k} or use the fused "
+            "fast path")
+    if shortlist_k < c and (float(np.min(np.asarray(thresh))) <= 0.0
+                            or float(geo_thresh) <= 0.0):
+        raise ValueError(
+            "shortlisting needs strictly positive thresh/geo_thresh: "
+            "un-shortlisted windows are scattered as score-0 "
+            "detections, which only read as empty under a positive "
+            f"threshold (got thresh={thresh!r}, "
+            f"geo_thresh={geo_thresh!r})")
     provider = DetectorProvider(
         scene=scene, det_cfg=det_cfg, det_params=det_params,
         thresh=jnp.broadcast_to(
             jnp.asarray(thresh, jnp.float32), (n_pairs,)),
         geo_thresh=jnp.asarray(geo_thresh, jnp.float32),
-        noise=jnp.asarray(noise, jnp.float32), chunk=chunk)
+        noise=jnp.asarray(noise, jnp.float32),
+        nbr8=fleet_statics(grid).neighbor8,
+        chunk=chunk, shortlist_k=shortlist_k, fused=fused,
+        use_kernel=use_kernel, kernel_interpret=kernel_interpret)
     return provider, state
 
 

@@ -6,6 +6,9 @@
   frame_delta/      tile-based frame delta encoder (MadEye transmission)
   neighbor_score/   fleet-batched candidate-neighbor scoring (shape search)
   cell_rasterize/   boxes -> cells x zooms aggregation (scene substrate)
+  crop_patchify/    fused rasterize -> ViT patch-embed for candidate
+                    crops (detector-in-step fast path; pixels stay in
+                    VMEM)
 
 Each kernel package ships `<name>.py` (pl.pallas_call + BlockSpec),
 `ops.py` (jit'd public wrapper) and `ref.py` (pure-jnp oracle used by the

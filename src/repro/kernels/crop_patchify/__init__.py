@@ -1,0 +1,2 @@
+from repro.kernels.crop_patchify import ops, ref
+from repro.kernels.crop_patchify.ops import crop_patchify

@@ -1,0 +1,122 @@
+"""Pallas kernel: fused rasterize -> ViT patch-embed for candidate crops.
+
+The detector-in-step fast path scores [F, K] shortlisted candidate
+windows per controller timestep. Unfused, every crop is rendered to an
+HBM pixel buffer ([F, K, res, res, 3] — at 256 cameras x 75 windows x
+64 px that is ~0.9 GB per step) only to be immediately contracted down
+to [F, K, gg, D] patch embeddings by the backbone's patch-embed conv.
+This kernel fuses the two: each grid step (one (camera, window) pair)
+paints the crop in VMEM — same last-painter-wins/visibility/rounding
+rules as scene_jax.render.render_crop — and contracts the patch tiles
+against the flattened patch-embed weights on the spot, so candidate
+crops never round-trip through HBM as pixels; only the ~res^2/p^2 x D
+token rows are written out.
+
+Per grid step the dominant working set is the [Mp, res, res] ownership
+intermediates: ~2 MB int32/bool at Mp = 32 objects, res = 64 — well
+under VMEM next to the [res, res, 3] crop (48 KB) and the
+[p*p*3, D] weight tile. ops.py precomputes the per-object paint colors
+and the background+noise plane so the kernel body is pure geometry +
+one [gg, p*p*3] x [p*p*3, D] matmul (MXU-shaped once D, p*p*3 reach
+128; the smoke config underfills the tile but the layout is right).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(res: int, patch: int, min_visible: float):
+    g = res // patch
+
+    def kernel(ox_ref, oy_ref, ow_ref, oh_ref, cr_ref, cg_ref, cb_ref,
+               win_ref, bgn_ref, w_ref, b_ref, out_ref):
+        ox = ox_ref[0].astype(jnp.float32)           # [Mp]
+        oy = oy_ref[0].astype(jnp.float32)
+        ow = ow_ref[0].astype(jnp.float32)
+        oh = oh_ref[0].astype(jnp.float32)
+        x0 = win_ref[0, 0, 0]
+        y0 = win_ref[0, 0, 1]
+        fw = win_ref[0, 0, 2]
+        fh = win_ref[0, 0, 3]
+
+        ox0 = ox - ow * 0.5
+        ox1 = ox + ow * 0.5
+        oy0 = oy - oh * 0.5
+        oy1 = oy + oh * 0.5
+        ix0 = jnp.maximum(ox0, x0)
+        ix1 = jnp.minimum(ox1, x0 + fw)
+        iy0 = jnp.maximum(oy0, y0)
+        iy1 = jnp.minimum(oy1, y0 + fh)
+        inter = (jnp.maximum(ix1 - ix0, 0.0)
+                 * jnp.maximum(iy1 - iy0, 0.0))
+        area = (ox1 - ox0) * (oy1 - oy0)
+        keep = inter / jnp.maximum(area, 1e-9) >= min_visible
+
+        # normalized clipped box -> pixel bounds (render_crop's rounding:
+        # clip first, then truncate — everything non-negative)
+        px0 = jnp.clip((ix0 - x0) / fw * res, 0, res - 1).astype(jnp.int32)
+        px1 = jnp.clip((ix1 - x0) / fw * res + 1, 1, res).astype(jnp.int32)
+        py0 = jnp.clip((iy0 - y0) / fh * res, 0, res - 1).astype(jnp.int32)
+        py1 = jnp.clip((iy1 - y0) / fh * res + 1, 1, res).astype(jnp.int32)
+
+        mp = ox.shape[0]
+        rr = jax.lax.broadcasted_iota(jnp.int32, (mp, res, res), 1)
+        cc = jax.lax.broadcasted_iota(jnp.int32, (mp, res, res), 2)
+        mi = jax.lax.broadcasted_iota(jnp.int32, (mp, res, res), 0)
+        hit = (keep[:, None, None]
+               & (rr >= py0[:, None, None]) & (rr < py1[:, None, None])
+               & (cc >= px0[:, None, None]) & (cc < px1[:, None, None]))
+        m_best = jnp.max(jnp.where(hit, mi, -1), axis=0)    # [res, res]
+        sel = jnp.maximum(m_best, 0)
+        painted = m_best >= 0
+
+        bgn = bgn_ref[0].astype(jnp.float32)         # [res, res, 3]
+        img = jnp.stack([
+            jnp.where(painted, cr_ref[0][sel], bgn[..., 0]),
+            jnp.where(painted, cg_ref[0][sel], bgn[..., 1]),
+            jnp.where(painted, cb_ref[0][sel], bgn[..., 2]),
+        ], axis=-1)
+        img = jnp.clip(img, 0.0, 1.0)
+
+        # [res, res, 3] -> [gg, p*p*3] patch rows, (row, col, chan) fast
+        # axis order matching the HWIO conv weight flatten in ops.py
+        tiles = img.reshape(g, patch, g, patch, 3)
+        tiles = tiles.transpose(0, 2, 1, 3, 4).reshape(
+            g * g, patch * patch * 3)
+        tok = jnp.dot(tiles, w_ref[...],
+                      preferred_element_type=jnp.float32)
+        out_ref[0, 0] = tok + b_ref[0]
+
+    return kernel
+
+
+def crop_patchify_batch(ox, oy, ow, oh, col_r, col_g, col_b, wins, bgn,
+                        wflat, bias, *, res: int, patch: int,
+                        min_visible: float = 0.25,
+                        interpret: bool = True) -> jnp.ndarray:
+    """ox/oy/ow/oh/col_* [F, Mp] object strips + paint colors (padded
+    slots carry ow = oh = 0: never visible); wins [F, K, 4] per-camera
+    FOV windows; bgn [F, res, res, 3] background + noise plane; wflat
+    [p*p*3, D] flattened patch-embed weights; bias [1, D]. Returns
+    tokens [F, K, (res/p)^2, D] float32."""
+    f, mp = ox.shape
+    k = wins.shape[1]
+    gg = (res // patch) ** 2
+    d = wflat.shape[1]
+    strip = pl.BlockSpec((1, mp), lambda i, j: (i, 0))
+    win = pl.BlockSpec((1, 1, 4), lambda i, j: (i, j, 0))
+    plane = pl.BlockSpec((1, res, res, 3), lambda i, j: (i, 0, 0, 0))
+    wspec = pl.BlockSpec(wflat.shape, lambda i, j: (0, 0))
+    bspec = pl.BlockSpec(bias.shape, lambda i, j: (0, 0))
+    out = pl.BlockSpec((1, 1, gg, d), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _make_kernel(res, patch, min_visible),
+        grid=(f, k),
+        in_specs=[strip, strip, strip, strip, strip, strip, strip,
+                  win, plane, wspec, bspec],
+        out_specs=out,
+        out_shape=jax.ShapeDtypeStruct((f, k, gg, d), jnp.float32),
+        interpret=interpret,
+    )(ox, oy, ow, oh, col_r, col_g, col_b, wins, bgn, wflat, bias)

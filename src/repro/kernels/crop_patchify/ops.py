@@ -1,0 +1,115 @@
+"""jit'd wrappers: candidate crops -> patch-embedding tokens.
+
+`crop_patchify` accepts the provider-native layout (scene object boxes +
+per-camera shortlisted FOV windows + the detector's conv patch-embed
+params) and returns the [F, K, gg, D] token rows the batched detector
+forward consumes. Like cell_rasterize, the pure-jnp reference is the
+default inside fused fleet steps — on the reference path the pixels are
+the existing `render_fleet_crops` output fed through the existing conv,
+so it is bit-identical to the unfused pixel pipeline. The Pallas kernel
+path (use_kernel=True, or REPRO_PATCHIFY_KERNEL=1) fuses rasterization
+into the patch contraction so crops never round-trip through HBM as
+pixels — the TPU serving path, equivalence-tested in interpret mode.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crop_patchify.crop_patchify import crop_patchify_batch
+from repro.kernels.crop_patchify.ref import crop_patchify_ref
+
+SUBLANES = 8
+
+
+def crop_patchify(pos, size, kind, oid, windows, patch_params, *,
+                  patch: int, res: int = 64, min_visible: float = 0.25,
+                  noise=None, dtype=jnp.float32, block_k: int | None = None,
+                  use_kernel: bool = False,
+                  interpret: bool = True) -> jnp.ndarray:
+    """pos/size [F, M, 2], kind [M], oid [F, M]; windows [F, K, 4] or
+    [K, 4] fleet-shared; patch_params {"w": [p, p, 3, D], "b": [D]};
+    noise [F, res, res, 3] or None. Returns tokens [F, K, (res/p)^2, D].
+
+    `block_k` (reference path only; must divide K) slabs the K window
+    axis so the transient pixel buffer peaks at [F, block_k, res, res,
+    3] instead of all K crops at once — the jnp analogue of the
+    kernel's per-block VMEM residency; tokens come out identical
+    because each crop's render+embed is independent. The Pallas path
+    already blocks per (camera, window) and ignores it.
+
+    The env override is resolved when this wrapper traces — inside an
+    enclosing jit (the episode scan) the branch is baked in at that
+    program's first trace; flip the kernel path via the provider's
+    use_kernel field there.
+    """
+    use_kernel = (use_kernel
+                  or os.environ.get("REPRO_PATCHIFY_KERNEL", "") == "1")
+    if res % patch != 0:
+        raise ValueError(f"res={res} must be a multiple of patch={patch}")
+    k = windows.shape[-2]
+    if block_k is not None and (block_k <= 0 or k % block_k != 0):
+        raise ValueError(f"block_k={block_k} must divide the {k} windows")
+    return _crop_patchify(pos, size, kind, oid, windows, patch_params,
+                          noise, patch=patch, res=res,
+                          min_visible=min_visible, dtype=dtype,
+                          block_k=block_k, use_kernel=use_kernel,
+                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("patch", "res", "min_visible", "dtype",
+                                   "block_k", "use_kernel", "interpret"))
+def _crop_patchify(pos, size, kind, oid, windows, patch_params, noise, *,
+                   patch: int, res: int, min_visible: float, dtype,
+                   block_k: int | None, use_kernel: bool,
+                   interpret: bool) -> jnp.ndarray:
+    if not use_kernel:
+        ref = partial(crop_patchify_ref, pos, size, kind, oid,
+                      patch_params=patch_params, patch=patch, res=res,
+                      min_visible=min_visible, noise=noise, dtype=dtype)
+        k = windows.shape[-2]
+        if block_k is None or block_k >= k:
+            return ref(windows=windows)
+        # slab the window axis: the serial dimension only covers the
+        # cheap render+embed; callers still batch the expensive model
+        # forward over all K at once
+        wblocks = jnp.moveaxis(
+            windows.reshape(windows.shape[:-2]
+                            + (k // block_k, block_k, 4)), -3, 0)
+        tok = jax.lax.map(lambda wb: ref(windows=wb), wblocks)
+        return jnp.moveaxis(tok, 0, 1).reshape(
+            (tok.shape[1], k) + tok.shape[3:])
+    from repro.scene_jax.render import object_colors, render_background
+
+    f, m = oid.shape
+    if windows.ndim == 2:
+        windows = jnp.broadcast_to(windows[None], (f,) + windows.shape)
+    mp = -(-m // SUBLANES) * SUBLANES
+    pad = [(0, 0), (0, mp - m)]
+    # padded slots carry ow = oh = 0 -> zero visibility, never painted
+    ox = jnp.pad(pos[..., 0], pad)
+    oy = jnp.pad(pos[..., 1], pad)
+    ow = jnp.pad(size[..., 0], pad)
+    oh = jnp.pad(size[..., 1], pad)
+    col = object_colors(kind, oid)                      # [F, M, 3]
+    col = jnp.pad(col, pad + [(0, 0)]).astype(jnp.float32)
+    bgn = render_background(res)[None]
+    if noise is not None:
+        bgn = bgn + noise
+    bgn = jnp.broadcast_to(bgn, (f, res, res, 3)).astype(jnp.float32)
+    wflat = patch_params["w"].astype(jnp.float32).reshape(
+        patch * patch * 3, -1)
+    bias = patch_params.get("b")
+    bias = (jnp.zeros((1, wflat.shape[1]), jnp.float32) if bias is None
+            else bias.astype(jnp.float32)[None])
+    tok = crop_patchify_batch(
+        ox.astype(jnp.float32), oy.astype(jnp.float32),
+        ow.astype(jnp.float32), oh.astype(jnp.float32),
+        col[..., 0], col[..., 1], col[..., 2],
+        windows.astype(jnp.float32), bgn, wflat, bias,
+        res=res, patch=patch, min_visible=min_visible,
+        interpret=interpret)
+    return tok.astype(dtype)

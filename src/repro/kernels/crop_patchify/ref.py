@@ -1,0 +1,122 @@
+"""Pure-jnp oracle: candidate crops -> ViT patch-embedding tokens.
+
+The reference composes the two stages the fused Pallas kernel replaces —
+rasterize every (camera, window) crop, then apply the detector
+backbone's conv patch-embed (`models.vit.vit_embed`'s conv, stride =
+patch, VALID) — and is **bit-identical** to
+`render_fleet_crops` + `conv2d` (pinned by array_equal in
+tests/test_kernels.py): the float pipeline (visibility cut, pixel-bound
+rounding, class colors and oid shades, background + noise, clip, the
+conv itself) is op-for-op the renderer's.
+
+What it does NOT share is the renderer's O(M * res^2) ownership
+reduction. Last-painter-wins ownership is pure integer logic — the
+winning painter of a pixel is the highest object index whose clipped
+rect covers it — so for M <= 32 objects the per-object row/column
+interval masks pack into one uint32 lane and ownership becomes a single
+AND + count-leading-zeros per pixel (m_best = 31 - clz(row & col),
+which is exactly -1 on empty masks since clz(0) = 32). Same integer
+winner -> same gathered color -> bit-identical pixels, at ~M times less
+ownership work — this is where the fused fast path's crop->token stage
+beats the retained chunked reference on any backend, before the Pallas
+kernel's VMEM residency is even in play.
+
+The pixels still materialize here ([F, K, res, res, 3] between the
+stages — ops.py's block_k bounds the transient); the Pallas kernel is
+the path where they never leave VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import conv2d
+from repro.scene_jax.render import (
+    object_colors,
+    render_background,
+    render_fleet_crops,
+)
+
+_PACK_MAX = 32      # object slots per uint32 ownership lane
+
+
+def _render_crops_packed(pos, size, kind, oid, windows, noise, *,
+                         res: int, min_visible: float) -> jnp.ndarray:
+    """Bit-identical render_fleet_crops for M <= 32 object slots.
+
+    pos/size [F, M, 2], oid [F, M], windows [F, K, 4] or [K, 4] shared,
+    noise [F, res, res, 3] or None -> [F, K, res, res, 3].
+    """
+    if windows.ndim == 2:
+        windows = jnp.broadcast_to(
+            windows[None], (pos.shape[0],) + windows.shape)
+    m = pos.shape[1]
+    x0 = windows[..., 0][..., None]                 # [F, K, 1]
+    y0 = windows[..., 1][..., None]
+    fw = windows[..., 2][..., None]
+    fh = windows[..., 3][..., None]
+    ox0 = (pos[..., 0] - size[..., 0] / 2)[:, None]  # [F, 1, M]
+    ox1 = (pos[..., 0] + size[..., 0] / 2)[:, None]
+    oy0 = (pos[..., 1] - size[..., 1] / 2)[:, None]
+    oy1 = (pos[..., 1] + size[..., 1] / 2)[:, None]
+
+    # visibility + pixel bounds: render_crop's float math, verbatim
+    ix0 = jnp.maximum(ox0, x0)
+    ix1 = jnp.minimum(ox1, x0 + fw)
+    iy0 = jnp.maximum(oy0, y0)
+    iy1 = jnp.minimum(oy1, y0 + fh)
+    inter = jnp.maximum(ix1 - ix0, 0.0) * jnp.maximum(iy1 - iy0, 0.0)
+    area = (ox1 - ox0) * (oy1 - oy0)
+    keep = inter / jnp.maximum(area, 1e-9) >= min_visible
+
+    px0 = jnp.clip((ix0 - x0) / fw * res, 0, res - 1).astype(jnp.int32)
+    px1 = jnp.clip((ix1 - x0) / fw * res + 1, 1, res).astype(jnp.int32)
+    py0 = jnp.clip((iy0 - y0) / fh * res, 0, res - 1).astype(jnp.int32)
+    py1 = jnp.clip((iy1 - y0) / fh * res + 1, 1, res).astype(jnp.int32)
+
+    # pack each object's row/col interval into its uint32 bit lane;
+    # ownership = highest set bit of (rowbits & colbits) per pixel
+    lane = (jnp.uint32(1) << jnp.arange(m, dtype=jnp.uint32))
+    rc = jnp.arange(res)
+    rows = (keep[..., None]
+            & (rc >= py0[..., None]) & (rc < py1[..., None]))
+    cols = (keep[..., None]
+            & (rc >= px0[..., None]) & (rc < px1[..., None]))
+    rowbits = jnp.sum(rows * lane[:, None], axis=-2, dtype=jnp.uint32)
+    colbits = jnp.sum(cols * lane[:, None], axis=-2, dtype=jnp.uint32)
+    bits = rowbits[..., :, None] & colbits[..., None, :]  # [F, K, r, r]
+    m_best = 31 - jax.lax.clz(bits).astype(jnp.int32)     # clz(0) -> -1
+
+    color = object_colors(kind, oid)                      # [F, M, 3]
+    img = render_background(res)
+    if noise is not None:
+        img = img[None] + noise                           # [F, r, r, 3]
+        img = img[:, None]
+    painted = jax.vmap(lambda c, s: c[s])(
+        color, jnp.maximum(m_best, 0))                    # [F, K, r, r, 3]
+    img = jnp.where((m_best >= 0)[..., None], painted, img)
+    return jnp.clip(img, 0.0, 1.0)
+
+
+def crop_patchify_ref(pos, size, kind, oid, windows, patch_params, *,
+                      patch: int, res: int = 64,
+                      min_visible: float = 0.25, noise=None,
+                      dtype=jnp.float32) -> jnp.ndarray:
+    """pos/size [F, M, 2], kind [M], oid [F, M]; windows [F, K, 4] (or
+    [K, 4] fleet-shared); patch_params the conv patch-embed pytree
+    ({"w": [p, p, 3, D], "b": [D]}); noise [F, res, res, 3] or None.
+    Returns patch-embedding tokens [F, K, (res/p)^2, D] in `dtype` —
+    `models.vit.vit_encode_tokens` input layout.
+    """
+    if pos.shape[1] <= _PACK_MAX:
+        crops = _render_crops_packed(pos, size, kind, oid, windows,
+                                     noise, res=res,
+                                     min_visible=min_visible)
+    else:
+        crops = render_fleet_crops(pos, size, kind, oid, windows,
+                                   res=res, min_visible=min_visible,
+                                   noise=noise)
+    f, k = crops.shape[:2]
+    x = conv2d(patch_params, crops.reshape((f * k, res, res, 3))
+               .astype(dtype), stride=patch, padding="VALID")
+    return x.reshape(f, k, -1, x.shape[-1])

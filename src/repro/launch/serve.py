@@ -43,11 +43,12 @@ PROVIDERS = ("tables", "scene", "detector")
 
 
 def _fleet_spec(provider: str, n: int, *, n_steps, seed, mbps, rtt_ms,
-                grid, workload, budget, substrate):
+                grid, workload, budget, substrate, shortlist_k=None):
     """The FleetRunSpec serve runs for `--fleet n --provider name` —
     scene/detector fleets get per-camera heterogeneity (world seeds,
     densities, speeds, mobile network traces); the tables fleet reuses
-    the already-built host substrate."""
+    the already-built host substrate. `shortlist_k` (detector provider)
+    caps the candidate windows scored per camera-step."""
     from repro.fleet import FleetRunSpec
 
     if provider == "tables":
@@ -66,7 +67,9 @@ def _fleet_spec(provider: str, n: int, *, n_steps, seed, mbps, rtt_ms,
         kwargs.update(mbps=np.full(n, mbps), rtt_ms=rtt_ms, net_seed=seed)
     return FleetRunSpec.from_objects(
         provider, n_cameras=n, n_steps=n_steps, seed=seed, grid=grid,
-        workload=workload, budget=budget, **kwargs)
+        workload=workload, budget=budget,
+        shortlist_k=shortlist_k if provider == "detector" else None,
+        **kwargs)
 
 
 def serve(fps: float, duration: float, *, seed: int = 3,
@@ -74,6 +77,7 @@ def serve(fps: float, duration: float, *, seed: int = 3,
           rotation_speed: float = 400.0, pipelined: bool = False,
           fleet: int = 0, provider: str = "tables",
           fleet_scene: int = 0, fleet_detector: int = 0,
+          shortlist_k: int | None = None,
           grid: OrientationGrid = DEFAULT_GRID,
           workload: Workload = DEFAULT_WORKLOAD):
     from repro.fleet import run_fleet
@@ -85,7 +89,6 @@ def serve(fps: float, duration: float, *, seed: int = 3,
     if provider not in PROVIDERS:
         raise SystemExit(f"--provider must be one of {PROVIDERS}, "
                          f"got {provider!r}")
-
     # fold the deprecated aliases into (n_cameras, provider) runs
     runs = [(fleet, provider)] if fleet else []
     for n, name, flag in ((fleet_scene, "scene", "--fleet-scene"),
@@ -94,6 +97,13 @@ def serve(fps: float, duration: float, *, seed: int = 3,
             print(f"note: {flag} N is deprecated; "
                   f"use --fleet N --provider {name}")
             runs.append((n, name))
+    if shortlist_k is not None and not any(p == "detector"
+                                           for _, p in runs):
+        raise SystemExit(
+            "--shortlist-k only applies to a detector fleet "
+            "(--fleet N --provider detector); no other provider scores "
+            "a per-window model, and dropping the flag silently would "
+            "make a shortlist sweep meaningless")
 
     t0 = time.time()
     video = build_video(grid, SceneConfig(fps=15, seed=seed), duration)
@@ -115,7 +125,8 @@ def serve(fps: float, duration: float, *, seed: int = 3,
         spec = _fleet_spec(name, n, n_steps=n_steps, seed=seed, mbps=mbps,
                            rtt_ms=rtt_ms, grid=grid, workload=workload,
                            budget=budget,
-                           substrate=(video, tables, acc, trace))
+                           substrate=(video, tables, acc, trace),
+                           shortlist_k=shortlist_k)
         r = run_fleet(spec)
         wall = r.timings["build_s"] + r.timings["episode_s"]
         print(f"fleet x{n:<4d} [{name}]: acc={r.accuracy:.3f} "
@@ -149,6 +160,10 @@ def main():
                     help="observation provider for --fleet: host tables, "
                          "device-resident scenes, or the detector network "
                          "scoring rendered crops in-scan")
+    ap.add_argument("--shortlist-k", type=int, default=None,
+                    help="detector provider: candidate windows rendered"
+                         " + scored per camera-step (multiple of the "
+                         "zoom count; default all = exhaustive)")
     ap.add_argument("--fleet-scene", type=int, default=0,
                     help="[deprecated] alias for "
                          "`--fleet N --provider scene`")
@@ -160,7 +175,8 @@ def main():
           rtt_ms=args.rtt_ms, rotation_speed=args.rotation_speed,
           pipelined=args.pipelined, fleet=args.fleet,
           provider=args.provider, fleet_scene=args.fleet_scene,
-          fleet_detector=args.fleet_detector)
+          fleet_detector=args.fleet_detector,
+          shortlist_k=args.shortlist_k)
 
 
 if __name__ == "__main__":

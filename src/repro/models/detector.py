@@ -66,6 +66,17 @@ def detector_init(key, cfg: DetectorConfig) -> Params:
     }
 
 
+def _neck_and_heads(params: Params, bb: Params, feats: jnp.ndarray):
+    """backbone feature map [B, g, g, D] -> raw head outputs."""
+    f = conv2d(bb["neck"]["lateral"], feats)
+    f = jax.nn.gelu(conv2d(bb["neck"]["smooth"], f))        # [B, g, g, F]
+
+    cls_logits = conv2d(params["heads"]["cls"], f)
+    box_raw = conv2d(params["heads"]["box"], f)
+    obj_logits = conv2d(params["heads"]["obj"], f)[..., 0]
+    return cls_logits, box_raw, obj_logits
+
+
 def detector_raw(params: Params, cfg: DetectorConfig, images: jnp.ndarray, *,
                  freeze_backbone: bool = False):
     """images [B,H,W,3] -> (cls_logits [B,g,g,K], box [B,g,g,4], obj [B,g,g]).
@@ -78,13 +89,21 @@ def detector_raw(params: Params, cfg: DetectorConfig, images: jnp.ndarray, *,
     if freeze_backbone:
         bb = jax.lax.stop_gradient(bb)
     feats = vit.vit_features(bb["vit"], bcfg, images)      # [B, g, g, D]
-    f = conv2d(bb["neck"]["lateral"], feats)
-    f = jax.nn.gelu(conv2d(bb["neck"]["smooth"], f))        # [B, g, g, F]
+    return _neck_and_heads(params, bb, feats)
 
-    cls_logits = conv2d(params["heads"]["cls"], f)
-    box_raw = conv2d(params["heads"]["box"], f)
-    obj_logits = conv2d(params["heads"]["obj"], f)[..., 0]
-    return cls_logits, box_raw, obj_logits
+
+def detector_raw_tokens(params: Params, cfg: DetectorConfig,
+                        tokens: jnp.ndarray, *,
+                        freeze_backbone: bool = False):
+    """Patch-embedding tokens [B, P, D] (vit.vit_embed layout — e.g. the
+    fused kernels/crop_patchify output) -> the same raw head outputs as
+    `detector_raw` on the images those tokens embed."""
+    bcfg = _backbone_cfg(cfg)
+    bb = params["backbone"]
+    if freeze_backbone:
+        bb = jax.lax.stop_gradient(bb)
+    feats = vit.vit_features_tokens(bb["vit"], bcfg, tokens)
+    return _neck_and_heads(params, bb, feats)
 
 
 def decode_boxes(box_raw: jnp.ndarray) -> jnp.ndarray:
@@ -102,7 +121,20 @@ def decode_boxes(box_raw: jnp.ndarray) -> jnp.ndarray:
 def detector_forward(params: Params, cfg: DetectorConfig,
                      images: jnp.ndarray) -> Detections:
     """images [B,H,W,3] -> top-`max_boxes` Detections per image."""
-    cls_logits, box_raw, obj_logits = detector_raw(params, cfg, images)
+    return _decode_detections(cfg, *detector_raw(params, cfg, images))
+
+
+def detector_forward_tokens(params: Params, cfg: DetectorConfig,
+                            tokens: jnp.ndarray) -> Detections:
+    """Patch tokens [B, P, D] -> top-`max_boxes` Detections per crop —
+    the single batched forward of the candidate-sparse fast path
+    (fleet.DetectorProvider flattens [F, K] -> [F*K] rows)."""
+    return _decode_detections(cfg,
+                              *detector_raw_tokens(params, cfg, tokens))
+
+
+def _decode_detections(cfg: DetectorConfig, cls_logits, box_raw,
+                       obj_logits) -> Detections:
     B, g = cls_logits.shape[0], cls_logits.shape[1]
     boxes = decode_boxes(box_raw).reshape(B, g * g, 4)
     cls_probs = jax.nn.softmax(

@@ -80,13 +80,29 @@ def _interp_pos_embed(pos: jnp.ndarray, n_patches: int) -> jnp.ndarray:
     return jnp.concatenate([cls, grid.reshape(1, g_new * g_new, -1)], axis=1)
 
 
-def vit_encode(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
-               impl: str = "xla") -> jnp.ndarray:
-    """images [B,H,W,3] -> tokens [B, 1+P, D] (CLS first)."""
+def vit_embed(params: Params, cfg: VisionConfig,
+              images: jnp.ndarray) -> jnp.ndarray:
+    """images [B,H,W,3] -> patch-embedding tokens [B, P, D] (no CLS).
+
+    The conv patch-embed in isolation — the seam the fused
+    `kernels/crop_patchify` path slots into: anything that produces the
+    same [B, P, D] tokens (e.g. rasterizing crops directly into patch
+    embeddings) can feed `vit_encode_tokens` without materializing
+    pixels."""
     B = images.shape[0]
     x = conv2d(params["patch_embed"], images.astype(cfg.dtype),
                stride=cfg.patch, padding="VALID")           # [B, h, w, D]
-    x = x.reshape(B, -1, cfg.d_model)
+    return x.reshape(B, -1, cfg.d_model)
+
+
+def vit_encode_tokens(params: Params, cfg: VisionConfig, x: jnp.ndarray, *,
+                      impl: str = "xla") -> jnp.ndarray:
+    """patch tokens [B, P, D] -> encoded tokens [B, 1+P, D] (CLS first).
+
+    The encoder tail of `vit_encode` after the conv patch-embed —
+    op-for-op identical, so image-fed and token-fed entries produce the
+    same floats for the same patch embeddings."""
+    B = x.shape[0]
     cls = jnp.broadcast_to(params["cls_token"].astype(x.dtype),
                            (B, 1, cfg.d_model))
     x = jnp.concatenate([cls, x], axis=1)
@@ -101,6 +117,13 @@ def vit_encode(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
     return layernorm(params["final_norm"], x)
 
 
+def vit_encode(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
+               impl: str = "xla") -> jnp.ndarray:
+    """images [B,H,W,3] -> tokens [B, 1+P, D] (CLS first)."""
+    return vit_encode_tokens(params, cfg, vit_embed(params, cfg, images),
+                             impl=impl)
+
+
 def vit_forward(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
                 impl: str = "xla") -> jnp.ndarray:
     """images [B,H,W,3] -> class logits [B, n_classes]."""
@@ -111,10 +134,18 @@ def vit_forward(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
 def vit_features(params: Params, cfg: VisionConfig, images: jnp.ndarray, *,
                  impl: str = "xla") -> jnp.ndarray:
     """images [B,H,W,3] -> patch feature map [B, h, w, D] (no CLS)."""
-    B, H = images.shape[0], images.shape[1]
-    g = H // cfg.patch
-    tokens = vit_encode(params, cfg, images, impl=impl)
-    return tokens[:, 1:].reshape(B, g, g, cfg.d_model)
+    return vit_features_tokens(params, cfg,
+                               vit_embed(params, cfg, images), impl=impl)
+
+
+def vit_features_tokens(params: Params, cfg: VisionConfig,
+                        tokens: jnp.ndarray, *,
+                        impl: str = "xla") -> jnp.ndarray:
+    """patch tokens [B, P, D] (square P) -> feature map [B, g, g, D]."""
+    B, P = tokens.shape[0], tokens.shape[1]
+    g = int(round(P ** 0.5))
+    x = vit_encode_tokens(params, cfg, tokens, impl=impl)
+    return x[:, 1:].reshape(B, g, g, cfg.d_model)
 
 
 def vit_loss(params: Params, cfg: VisionConfig, images: jnp.ndarray,

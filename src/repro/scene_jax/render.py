@@ -57,6 +57,18 @@ def render_noise(rng: jnp.ndarray, frame, res: int) -> jnp.ndarray:
     return jax.vmap(lambda k: jax.random.normal(k, (res, res, 3)))(keys)
 
 
+def object_colors(kind, oid) -> jnp.ndarray:
+    """Per-object paint colors [..., M, 3]: class base color times the
+    multiplicative oid shade, in modular arithmetic (identical to
+    data/render.render_image). kind [M] (or broadcastable), oid [..., M].
+    Shared by the jnp renderer and the fused kernels/crop_patchify path
+    so the paint model has one definition."""
+    shade = 0.7 + 0.3 * ((oid % 97) * _SHADE_MULT_97 % 97) / 97.0
+    return jnp.where((kind == PERSON)[..., None],
+                     jnp.asarray(_PERSON_COLOR),
+                     jnp.asarray(_CAR_COLOR)) * shade[..., None]
+
+
 def render_crop(pos, size, kind, oid, window, *, res: int = 64,
                 min_visible: float = 0.25,
                 noise_img: jnp.ndarray | None = None) -> jnp.ndarray:
@@ -92,9 +104,7 @@ def render_crop(pos, size, kind, oid, window, *, res: int = 64,
     py0 = jnp.clip(by0 * res, 0, res - 1).astype(jnp.int32)
     py1 = jnp.clip(by1 * res + 1, 1, res).astype(jnp.int32)
 
-    shade = 0.7 + 0.3 * ((oid % 97) * _SHADE_MULT_97 % 97) / 97.0
-    color = jnp.where((kind == PERSON)[:, None], jnp.asarray(_PERSON_COLOR),
-                      jnp.asarray(_CAR_COLOR)) * shade[:, None]   # [M, 3]
+    color = object_colors(kind, oid)                              # [M, 3]
 
     img = render_background(res)
     if noise_img is not None:
@@ -123,17 +133,20 @@ def render_fleet_crops(pos, size, kind, oid, windows, *, res: int = 64,
     """The whole fleet's candidate-orientation crops in one pass.
 
     pos/size [F, M, 2], kind [M] (slot layout is fleet-wide: scene_jax
-    .kind_mask), oid [F, M], windows [C, 4], noise [F, res, res, 3] or
-    None (one noise image per camera per frame, shared across windows —
-    data/render seeds its Generator per frame, so its noise is likewise
-    shared across the crops of one snapshot). Returns [F, C, res, res, 3].
+    .kind_mask), oid [F, M], windows [C, 4] fleet-shared or [F, C, 4]
+    per camera (the candidate-sparse shortlist gathers a different
+    window set per camera), noise [F, res, res, 3] or None (one noise
+    image per camera per frame, shared across windows — data/render
+    seeds its Generator per frame, so its noise is likewise shared
+    across the crops of one snapshot). Returns [F, C, res, res, 3].
     """
     per_window = jax.vmap(
         lambda p, s, o, w, nz: render_crop(
             p, s, kind, o, w, res=res, min_visible=min_visible,
             noise_img=nz),
         in_axes=(None, None, None, 0, None))
-    per_cam = jax.vmap(per_window, in_axes=(0, 0, 0, None, 0))
+    win_ax = None if windows.ndim == 2 else 0
+    per_cam = jax.vmap(per_window, in_axes=(0, 0, 0, win_ax, 0))
     if noise is None:
         noise = jnp.zeros((pos.shape[0], res, res, 3))
     return per_cam(pos, size, oid, windows, noise)

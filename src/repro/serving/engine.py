@@ -42,6 +42,23 @@ def detector_scores(params, cfg: DetectorConfig,
     return det.detector_forward(params, cfg, images)
 
 
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def detector_scores_tokens(params, cfg: DetectorConfig,
+                           tokens: jnp.ndarray) -> det.Detections:
+    """Patch-embedding tokens [B, P, D] -> Detections.
+
+    The candidate-sparse fast path's ONE batched forward: the fleet
+    provider flattens its [F, K] shortlisted crops to B = F*K token rows
+    (emitted by kernels/crop_patchify without materializing pixels) and
+    scores them in a single program instead of a serial per-chunk
+    lax.map. The token buffer is donated — at the top level XLA reuses
+    it for activations, so peak memory stays at the activation slab
+    rather than tokens + activations (inside an enclosing jit, e.g. the
+    episode scan, donation is a no-op and XLA schedules as usual).
+    """
+    return det.detector_forward_tokens(params, cfg, tokens)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def detector_counts_and_areas(params, cfg: DetectorConfig,
                               images: jnp.ndarray,

@@ -218,3 +218,75 @@ def test_save_detector_params_rejects_non_contract(tmp_path):
         save_detector_params(bad, {"a/b": np.zeros(3)})  # '/' in key
     with pytest.raises(TypeError):
         save_detector_params(bad, {"a": [1, 2, 3]})      # non-array leaf
+
+
+# ---------------------------------------------------------------------------
+# detector provider knobs: chunk slabs + candidate shortlist
+# ---------------------------------------------------------------------------
+
+def _detector_provider(**kw):
+    cfg = fleet_config(GRID, BUDGET)
+    wl = FleetRunSpec().workload_obj()
+    return make_detector_provider(GRID, wl, cfg, n_cameras=1, n_steps=2,
+                                  **kw)[0]
+
+
+def test_auto_chunk_selection():
+    """Default chunk = one cell-row of zooms when it divides N*Z; on
+    window counts where it doesn't, the largest divisor <= the default
+    is chosen instead of silently slabbing unevenly."""
+    from repro.fleet.runner import _auto_chunk
+
+    assert _detector_provider().chunk == 15     # 5x5 grid, 3 zooms
+    assert _detector_provider(chunk=25).chunk == 25
+    assert _auto_chunk(75, 15) == 15
+    assert _auto_chunk(21, 6) == 3              # odd: walk down to 3
+    assert _auto_chunk(13, 6) == 1              # prime window count
+    assert _auto_chunk(30, 100) == 30           # default > n_windows
+    for c in (75, 21, 13, 8):
+        for default in (1, 5, 6, 15, 100):
+            got = _auto_chunk(c, default)
+            assert c % got == 0 and 1 <= got <= max(1, min(default, c))
+
+
+def test_non_dividing_chunk_fails_loudly():
+    with pytest.raises(ValueError, match="must divide"):
+        _detector_provider(chunk=7)             # 75 % 7 != 0
+
+
+def test_shortlist_k_validation():
+    """shortlist_k keeps whole cells (multiples of the zoom count) and
+    is bounded by N*Z; the chunked reference path is exhaustive-only."""
+    assert _detector_provider().shortlist_k == 75          # default: all
+    assert _detector_provider(shortlist_k=18).shortlist_k == 18
+    with pytest.raises(ValueError, match="multiple of the"):
+        _detector_provider(shortlist_k=10)                 # 10 % 3 != 0
+    with pytest.raises(ValueError, match="multiple of the"):
+        _detector_provider(shortlist_k=78)                 # > N*Z
+    with pytest.raises(ValueError, match="multiple of the"):
+        _detector_provider(shortlist_k=0)
+    with pytest.raises(ValueError, match="exhaustive"):
+        _detector_provider(shortlist_k=18, fused=False)
+    assert not _detector_provider(fused=False).fused       # ok: all cells
+    # un-shortlisted windows scatter as score-0 detections, which only
+    # read as empty under a strictly positive threshold
+    with pytest.raises(ValueError, match="positive thresh"):
+        _detector_provider(shortlist_k=18, thresh=0.0)
+    assert _detector_provider(thresh=0.0).shortlist_k == 75  # exhaustive ok
+
+
+def test_spec_shortlist_k_field_plumbs_and_roundtrips():
+    """The first-class FleetRunSpec.shortlist_k reaches the detector
+    factory and survives the JSON round trip."""
+    spec = FleetRunSpec(provider="detector", n_cameras=1, n_steps=2,
+                        budget={"fps": 2.0}, shortlist_k=18)
+    assert FleetRunSpec.from_json(spec.to_json()) == spec
+    prep = prepare_fleet_run(spec)
+    assert prep.provider.shortlist_k == 18
+    # default None leaves the provider exhaustive
+    prep = prepare_fleet_run(dataclasses.replace(spec, shortlist_k=None))
+    assert prep.provider.shortlist_k == 75
+    # providers without a per-window model reject it loudly
+    with pytest.raises(TypeError):
+        prepare_fleet_run(FleetRunSpec(provider="scene", n_cameras=1,
+                                       n_steps=2, shortlist_k=18))

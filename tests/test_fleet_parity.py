@@ -280,6 +280,67 @@ def test_unified_entry_matches_legacy_detector_entry():
 
 
 # ---------------------------------------------------------------------------
+# detector fast path: fused exhaustive pipeline vs the chunked reference
+# ---------------------------------------------------------------------------
+
+def test_detector_fused_exhaustive_matches_chunked_reference():
+    """The candidate-sparse fused pipeline at shortlist_k = N*Z (score
+    everything) makes decisions identical, step for step, to the
+    pre-shortlist serial-lax.map chunk loop (`fused=False`, the retained
+    pre-PR pipeline) — same explored cells, path order, zooms, sent
+    frames, and bit-equal predicted accuracies. The fast path changes
+    how candidates are rendered and scored (fused crop->token stage, one
+    batched [F*K] forward), never what the controller sees."""
+    import dataclasses
+
+    from repro.fleet import make_detector_provider
+
+    cfg = fleet_config(GRID, BUDGET)
+    spec = workload_spec(WORKLOAD)
+    statics = fleet_statics(GRID)
+    provider, st0 = make_detector_provider(
+        GRID, WORKLOAD, cfg, n_cameras=2, n_steps=4, scene_seeds=[5, 9])
+    assert provider.fused and provider.shortlist_k == N * 3
+    _, out_fast = run_fleet_episode(cfg, spec, statics, st0, provider)
+    _, out_ref = run_fleet_episode(cfg, spec, statics, st0,
+                                   dataclasses.replace(provider,
+                                                       fused=False))
+    for name in DECISION_FIELDS + ("chosen",):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out_fast, name)),
+            np.asarray(getattr(out_ref, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(out_fast.pred_acc),
+                                  np.asarray(out_ref.pred_acc))
+    np.testing.assert_array_equal(np.asarray(out_fast.acc_chosen),
+                                  np.asarray(out_ref.acc_chosen))
+
+
+def test_detector_shortlist_covers_search_reachable_cells():
+    """shortlist_windows keeps every window the shape search can reach
+    this step from the carried state: the current shape and its
+    8-neighbor ring rank ahead of everything else, so with K/Z >= the
+    reachable set they are all shortlisted; the remaining slots go to
+    the top-EWMA cells (reseed/scout targets)."""
+    from repro.fleet import init_fleet, shortlist_windows
+
+    cfg = fleet_config(GRID, BUDGET)
+    statics = fleet_statics(GRID)
+    st = init_fleet(GRID, 2)
+    shape = np.asarray(st.shape[0])
+    ring = (np.asarray(statics.neighbor8)[shape].any(0)) & ~shape
+    reach = np.flatnonzero(shape | ring)
+    kc = len(reach) + 2
+    widx = np.asarray(shortlist_windows(cfg, st, statics.neighbor8,
+                                        kc * 3))
+    assert widx.shape == (2, kc * 3)
+    cells = set((widx[0] // 3).tolist())
+    assert set(reach.tolist()) <= cells
+    # all zooms of every kept cell ride along
+    assert set(widx[0].tolist()) == {c * 3 + z for c in cells
+                                     for z in range(3)}
+
+
+# ---------------------------------------------------------------------------
 # randomized unit parity for the batched shape ops + walk
 # ---------------------------------------------------------------------------
 

@@ -7,6 +7,7 @@ import pytest
 from repro.kernels.box_iou.ops import box_iou, match_boxes, nms_mask
 from repro.kernels.box_iou.ref import box_iou_ref
 from repro.kernels.cell_rasterize.ops import cell_rasterize, window_arrays
+from repro.kernels.crop_patchify.ops import crop_patchify
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.frame_delta.ops import apply_delta, frame_delta
@@ -236,6 +237,75 @@ def test_cell_rasterize_ref_matches_gt_boxes():
                     area[b, 0, c],
                     float((gt["boxes"][:, 2] * gt["boxes"][:, 3]).sum()),
                     atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# crop patchify (fused rasterize -> ViT patch-embed, detector fast path)
+# ---------------------------------------------------------------------------
+
+def _patchify_inputs(f, m, k, d, seed=0, *, shared=False, with_noise=True):
+    """Random scene boxes + per-camera window subsets + patch-embed
+    params, shaped like the detector provider's fast path."""
+    from repro.core.grid import DEFAULT_GRID
+    from repro.models.layers import conv_init
+
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.uniform([0, 0], [150, 75], (f, m, 2)), jnp.float32)
+    size = jnp.asarray(rng.uniform(1.5, 9.0, (f, m, 2)), jnp.float32)
+    size = size.at[:, -2:].set(0.0)                 # disabled slots
+    kind = jnp.asarray(rng.integers(0, 2, m), jnp.int32)
+    oid = jnp.asarray(rng.integers(0, 4000, (f, m)), jnp.int32)
+    wins_all = jnp.asarray(window_arrays(DEFAULT_GRID))
+    if shared:
+        wins = wins_all[: k]
+    else:
+        widx = np.stack([rng.choice(wins_all.shape[0], k, replace=False)
+                         for _ in range(f)])
+        wins = wins_all[jnp.asarray(widx)]
+    pe = conv_init(jax.random.fold_in(KEY, seed), 16, 16, 3, d)
+    noise = (0.05 * jax.random.normal(jax.random.fold_in(KEY, seed + 1),
+                                      (f, 64, 64, 3))
+             if with_noise else None)
+    return pos, size, kind, oid, wins, pe, noise
+
+
+@pytest.mark.parametrize("f,m,k,d,shared",
+                         [(1, 6, 3, 8, False), (3, 22, 5, 24, False),
+                          (2, 22, 4, 16, True)])
+def test_crop_patchify_kernel_matches_ref(f, m, k, d, shared):
+    """Pallas kernel (rasterize fused into the patch contraction, pixels
+    never materialized) == render_fleet_crops + conv patchify reference,
+    within fp32 tolerance — per-camera and fleet-shared window sets."""
+    pos, size, kind, oid, wins, pe, noise = _patchify_inputs(
+        f, m, k, d, seed=f * 100 + k, shared=shared)
+    ref = crop_patchify(pos, size, kind, oid, wins, pe, patch=16, res=64,
+                        noise=noise, use_kernel=False)
+    ker = crop_patchify(pos, size, kind, oid, wins, pe, patch=16, res=64,
+                        noise=noise, use_kernel=True)
+    assert ref.shape == (f, k, 16, d)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_crop_patchify_ref_is_render_plus_embed():
+    """The reference path IS the unfused pixel pipeline: rendering the
+    same windows and running the backbone conv embed (vit.vit_embed
+    layout) reproduces it bit-for-bit — the contract that makes the
+    fast path's exhaustive mode decision-identical to the pre-shortlist
+    detector provider."""
+    from repro.scene_jax.render import render_fleet_crops
+
+    pos, size, kind, oid, wins, pe, noise = _patchify_inputs(
+        2, 10, 4, 12, seed=7)
+    got = crop_patchify(pos, size, kind, oid, wins, pe, patch=16, res=64,
+                        noise=noise, use_kernel=False)
+    from repro.models.layers import conv2d
+
+    crops = render_fleet_crops(pos, size, kind, oid, wins, res=64,
+                               noise=noise)
+    want = conv2d(pe, crops.reshape(8, 64, 64, 3), stride=16,
+                  padding="VALID").reshape(2, 4, 16, 12)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------

@@ -162,6 +162,35 @@ def test_detector_provider_deterministic_across_fleet_sizes():
     assert float(np.asarray(out3.pred_acc).max()) > 0.0
 
 
+def test_detector_shortlist_deterministic_across_fleet_sizes():
+    """The candidate shortlist is a pure per-camera function of
+    controller state, so the sparse fast path keeps the provider's
+    determinism discipline: the same camera embedded in a 1-fleet and a
+    3-fleet runs the identical episode, and the shortlist genuinely
+    bites (decisions differ from a camera watching another world)."""
+    cfg = fleet_config(GRID, BUDGET)
+    spec = workload_spec(WORKLOAD)
+    statics = fleet_statics(GRID)
+
+    kw = dict(n_steps=4, shortlist_k=18)
+    p3, st3 = make_detector_provider(GRID, WORKLOAD, cfg, n_cameras=3,
+                                     scene_seeds=[5, 9, 5], **kw)
+    _, out3 = run_fleet_episode(cfg, spec, statics, st3, p3)
+    p1, st1 = make_detector_provider(GRID, WORKLOAD, cfg, n_cameras=1,
+                                     scene_seeds=[5], **kw)
+    _, out1 = run_fleet_episode(cfg, spec, statics, st1, p1)
+    for name in DECISION_FIELDS:
+        a3 = np.asarray(getattr(out3, name))
+        a1 = np.asarray(getattr(out1, name))
+        np.testing.assert_array_equal(a3[:, 0], a3[:, 2],
+                                      err_msg=f"{name}: lockstep")
+        np.testing.assert_array_equal(a3[:, 0], a1[:, 0],
+                                      err_msg=f"{name}: fleet size")
+    assert not np.array_equal(np.asarray(out3.explored)[:, 0],
+                              np.asarray(out3.explored)[:, 1])
+    assert float(np.asarray(out3.pred_acc).max()) > 0.0
+
+
 # ---------------------------------------------------------------------------
 # hoisted engine jit: threshold sweeps never recompile
 # ---------------------------------------------------------------------------
