@@ -18,6 +18,9 @@ benchmark runs four pipelines on identical worlds at each fleet size:
 and reports steady-state camera-steps/sec per leg, each leg's overhead
 factor over the oracle, and the two headline ratios: batching+fusion
 alone (legacy/fast at K = N*Z) and the full fast path (legacy/short).
+A fifth measurement reruns `fast` with the full in-scan FleetMetrics
+(repro.obs) enabled and reports metrics_overhead_F — the telemetry tax
+on the steady-state scan (gated < 1.15x by tests/test_obs.py).
 
   PYTHONPATH=src python -m benchmarks.bench_detector_step
 """
@@ -95,6 +98,17 @@ def run(fleet_sizes=FLEET_SIZES, n_steps: int = N_STEPS,
             scan_s = time.perf_counter() - t0
             legs[name] = (compile_s, scan_s, o)
 
+        # in-scan telemetry overhead: the same fast provider with the
+        # full FleetMetrics enabled (repro.obs) — the acceptance gate is
+        # metrics_overhead < 1.15x of the metrics-free scan
+        from repro.obs import MetricsSpec
+
+        mspec = MetricsSpec()
+        jax.block_until_ready(prep.episode(metrics=mspec))
+        t0 = time.perf_counter()
+        jax.block_until_ready(prep.episode(metrics=mspec))
+        metrics_scan = time.perf_counter() - t0
+
         cps = f * n_steps
         oracle_scan = legs["oracle"][1]
         for name in ("fast", "short", "legacy"):
@@ -113,6 +127,9 @@ def run(fleet_sizes=FLEET_SIZES, n_steps: int = N_STEPS,
         out[f"render_infer_us_per_camera_step_{f}"] = float(
             max(legs["fast"][1] - oracle_scan, 0.0) / cps * 1e6)
         out[f"det_compile_s_{f}"] = float(legs["fast"][0])
+        out[f"metrics_cps_{f}"] = float(cps / metrics_scan)
+        out[f"metrics_overhead_{f}"] = float(
+            metrics_scan / legs["fast"][1])
         out[f"mean_shape_{f}"] = float(
             np.asarray(legs["fast"][2].n_explored, float).mean())
     return out

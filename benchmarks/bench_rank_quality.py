@@ -45,18 +45,20 @@ def _chosen_rank(acc: np.ndarray, out, step: int, cam: int = 0) -> int | None:
 def fleet_rank_quality(n_steps: int = 16, shortlist_k: int = 18) -> dict:
     """Detector-backed vs oracle-backed orientation choices on the same
     scene: median oracle-accuracy rank of each controller's chosen
-    orientation (camera 0; the oracle table comes from
-    materialize_scene_tables replaying the identical scene stream)."""
+    orientation (camera 0). The ranks are read straight off the in-scan
+    FleetMetrics `chosen_rank` output (repro.obs) — no
+    materialize_scene_tables replay pass; tests/test_obs.py pins the
+    in-scan rank against the host `_chosen_rank` replay grading."""
     from repro.core import DEFAULT_GRID
     from repro.core.tradeoff import BudgetConfig
     from repro.fleet import (
         fleet_config,
         fleet_statics,
         make_detector_provider,
-        materialize_scene_tables,
         run_fleet_episode,
         workload_spec,
     )
+    from repro.obs import MetricsSpec, median_valid_rank
 
     wl = _fleet_workload()
     cfg = fleet_config(DEFAULT_GRID, BudgetConfig(fps=3.0))
@@ -65,21 +67,17 @@ def fleet_rank_quality(n_steps: int = 16, shortlist_k: int = 18) -> dict:
     provider, st0 = make_detector_provider(
         DEFAULT_GRID, wl, cfg, n_cameras=1, n_steps=n_steps,
         scene_seeds=[3], shortlist_k=shortlist_k)
-    _, out_det = run_fleet_episode(cfg, spec, statics, st0, provider)
-    _, out_orc = run_fleet_episode(cfg, spec, statics, st0,
-                                   provider.scene)
-    # scene dynamics are decision-independent, so one materialized
-    # replay grades both episodes
-    acc = np.asarray(materialize_scene_tables(
-        cfg, spec, statics, st0, provider.scene).acc_true)
-    det = [r for e in range(n_steps)
-           if (r := _chosen_rank(acc, out_det, e)) is not None]
-    orc = [r for e in range(n_steps)
-           if (r := _chosen_rank(acc, out_orc, e)) is not None]
+    mspec = MetricsSpec(ewma=False, budget=False, shortlist=False)
+    _, _, m_det = run_fleet_episode(cfg, spec, statics, st0, provider,
+                                    metrics=mspec)
+    _, _, m_orc = run_fleet_episode(cfg, spec, statics, st0,
+                                    provider.scene, metrics=mspec)
+    det = np.asarray(m_det["chosen_rank"])
     return {
-        "fleet_det_median_rank": float(np.median(det)) if det else 0.0,
-        "fleet_oracle_median_rank": float(np.median(orc)) if orc else 0.0,
-        "fleet_rank_steps": len(det),
+        "fleet_det_median_rank": median_valid_rank(det),
+        "fleet_oracle_median_rank": median_valid_rank(
+            m_orc["chosen_rank"]),
+        "fleet_rank_steps": int((det > 0).sum()),
     }
 
 

@@ -181,6 +181,23 @@ def acc_cache(seed: int, duration_s: float = DURATION_S) -> AccCache:
     return AccCache(video, tables)
 
 
+def git_sha() -> str:
+    """Short commit sha of the repo this benchmark run measures —
+    "unknown" outside a git checkout (extracted tarball, CI cache).
+    Stamped into BENCH_history.jsonl so the perf trajectory maps back
+    to commits."""
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.TimeoutExpired):
+        return "unknown"
+
+
 def median_iqr(values) -> tuple:
     v = np.asarray(sorted(values), float)
     return (float(np.median(v)), float(np.percentile(v, 25)),

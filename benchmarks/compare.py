@@ -22,9 +22,17 @@ import json
 import sys
 
 
-def compare(baseline: dict, fresh: dict, max_slowdown: float) -> list:
+def compare(baseline: dict, fresh: dict, max_slowdown: float, *,
+            base_derived: dict | None = None,
+            fresh_derived: dict | None = None) -> list:
     """Returns a list of failure strings (empty = pass). Metrics present
-    in only one input are reported as new/removed and never fail."""
+    in only one input are reported as new/removed and never fail. The
+    optional derived dicts ({name: headline-metric string}) add an
+    informational drift line when a metric's derived value changed —
+    never a failure, since derived values legitimately move with the
+    code (that is the point of tracking them)."""
+    base_derived = base_derived or {}
+    fresh_derived = fresh_derived or {}
     failures = []
     for name, base_us in baseline.items():
         if name not in fresh:
@@ -36,18 +44,26 @@ def compare(baseline: dict, fresh: dict, max_slowdown: float) -> list:
         status = "FAIL" if ratio > max_slowdown else "ok"
         print(f"{status:4s} {name}: {base_us:.0f}us -> {fresh[name]:.0f}us "
               f"({ratio:.2f}x)")
+        bd, fd = base_derived.get(name), fresh_derived.get(name)
+        if bd is not None and fd is not None and bd != fd:
+            print(f"     derived drift: {bd!r} -> {fd!r}")
         if ratio > max_slowdown:
             failures.append(f"{name}: {ratio:.2f}x slowdown "
                             f"(limit {max_slowdown:.2f}x)")
     for name in sorted(fresh.keys() - baseline.keys()):
-        print(f"new  {name}: {fresh[name]:.0f}us (no baseline yet)")
+        derived = fresh_derived.get(name)
+        extra = f" [{derived}]" if derived else ""
+        print(f"new  {name}: {fresh[name]:.0f}us{extra} "
+              f"(no baseline yet)")
     return failures
 
 
-def _load(path: str) -> dict:
+def _load(path: str) -> tuple:
+    """-> ({name: us_per_call}, {name: derived-metric string})."""
     with open(path) as f:
         rows = json.load(f)
-    return {r["name"]: float(r["us_per_call"]) for r in rows}
+    return ({r["name"]: float(r["us_per_call"]) for r in rows},
+            {r["name"]: r.get("derived") for r in rows})
 
 
 def main(argv=None) -> int:
@@ -57,8 +73,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-slowdown", type=float, default=2.0,
                     help="fail when fresh/baseline exceeds this ratio")
     args = ap.parse_args(argv)
-    failures = compare(_load(args.baseline), _load(args.fresh),
-                       args.max_slowdown)
+    base_us, base_d = _load(args.baseline)
+    fresh_us, fresh_d = _load(args.fresh)
+    failures = compare(base_us, fresh_us, args.max_slowdown,
+                       base_derived=base_d, fresh_derived=fresh_d)
     if failures:
         print("\nbench regression:", file=sys.stderr)
         for msg in failures:

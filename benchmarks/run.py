@@ -5,6 +5,18 @@ wall time of the benchmark harness; derived = its headline metric) and
 writes the same rows to BENCH_repro.json so the perf trajectory is
 machine-readable across PRs.
 
+Observability side channels of every run (repro.obs):
+  BENCH_trace.json       Chrome trace of the whole sweep — one span per
+                         benchmark leg plus the fleet build/compile/
+                         steady and kernel-op spans underneath (open in
+                         chrome://tracing or Perfetto; BENCH_TRACE
+                         overrides the path)
+  BENCH_telemetry.jsonl  the telemetry_stream benchmark's JSONL event
+                         stream (BENCH_TELEMETRY overrides)
+  BENCH_history.jsonl    append-only run log: {git_sha, date, quick,
+                         metrics} per invocation — the perf trajectory
+                         across commits (BENCH_HISTORY overrides)
+
   PYTHONPATH=src python -m benchmarks.run            # quick substrate
   BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
   BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run   # CI smoke:
@@ -17,6 +29,47 @@ from __future__ import annotations
 import json
 import os
 import time
+
+
+def telemetry_stream(quick: bool) -> dict:
+    """Run a metrics-enabled detector fleet and stream it as JSONL
+    telemetry — benchmarks the full observability path (in-scan
+    FleetMetrics -> chunked device->host transfer -> event schema) and
+    leaves BENCH_telemetry.jsonl behind as a CI artifact."""
+    from repro.fleet.api import FleetRunSpec, run_fleet
+    from repro.obs import episode_events, median_valid_rank, write_events
+
+    # fps=3 gives the searcher time to explore >1 cell per step, so the
+    # chosen_rank metric has gradable (non-degenerate) steps to median
+    spec = FleetRunSpec(
+        provider="detector", n_cameras=4, n_steps=12 if quick else 32,
+        shortlist_k=18, budget={"fps": 3.0}, metrics=True)
+    r = run_fleet(spec)
+    path = os.environ.get("BENCH_TELEMETRY", "BENCH_telemetry.jsonl")
+    open(path, "w").close()          # this run's stream only, not a log
+    n_events = write_events(episode_events(r, chunk=8), path)
+    return {
+        "events": n_events,
+        "median_rank": median_valid_rank(r.metrics["chosen_rank"]),
+        "steady_s": r.timings["steady_s"],
+    }
+
+
+def append_history(rows: list, quick: bool) -> str:
+    """Append this run's summary to the BENCH_history.jsonl perf log."""
+    from benchmarks import common
+
+    path = os.environ.get("BENCH_HISTORY", "BENCH_history.jsonl")
+    entry = {
+        "git_sha": common.git_sha(),
+        "date": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "quick": quick,
+        "metrics": {r["name"]: {"us_per_call": round(r["us_per_call"]),
+                                "derived": r["derived"]} for r in rows},
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return path
 
 
 def main() -> None:
@@ -34,12 +87,15 @@ def main() -> None:
         bench_sota,
     )
 
+    from repro.obs import span, tracing
+
     quick = os.environ.get("BENCH_QUICK", "") == "1"
     rows = []
 
     def timed(name, fn, derive):
         t0 = time.perf_counter()
-        out = fn()
+        with span(f"bench/{name}"):
+            out = fn()
         dt = (time.perf_counter() - t0) * 1e6
         if out is None:
             # the benchmark declined to run (missing input artifacts,
@@ -52,48 +108,67 @@ def main() -> None:
                      "derived": derive(out)})
         return out
 
-    if quick:
-        # CI smoke: every module above is imported (so benchmark imports
-        # can't silently rot) but only the cheap device-path entries run
-        timed("scene_device_vs_host_tables",
-              lambda: bench_scene_device.run(quick=True),
-              lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
-                        f"@{o['cameras']}x{o['steps']}")
-        timed("detector_in_step",
-              lambda: bench_detector_step.run(quick=True),
-              lambda o: f"det_cps={o['det_cps_8']:.0f} "
-                        f"short_cps={o['det_short_cps_8']:.0f}"
-                        f"@8x{o['steps']}")
-    else:
-        timed("fig1_2_orientation_gains", bench_orientation_gains.run,
-              lambda o: f"dyn_over_fixed=+{o['dyn_over_fixed']*100:.1f}%")
-        timed("fig3_7_9_10_11_scene_stats", bench_scene_stats.run,
-              lambda o: f"corr1hop={o['corr_1hop']:.2f}")
-        timed("fig12_13_14_e2e_sweeps", bench_e2e_sweeps.run,
-              lambda o: f"fps1_win=+{o['fps1_win']*100:.1f}%")
-        timed("fig15_table2_sota", bench_sota.run,
-              lambda o: f"madeye={o['madeye']:.3f}")
-        timed("table1_fixed_cameras", bench_fixed_cameras.run,
-              lambda o: f"madeye1_reduction={o['madeye1']['reduction']:.1f}x")
-        timed("fig16_rank_quality", bench_rank_quality.run,
-              lambda o: f"median_rank={o['detector_median_rank']:.1f}")
-        timed("sec5_4_deepdive", bench_deepdive.run,
-              lambda o: f"path_us={o['path_us']:.0f}")
-        timed("fleet_scale_controller", bench_fleet_scale.run,
-              lambda o: f"speedup={o['speedup']:.0f}x"
-                        f"@{o['cameras']}x{o['steps']}")
-        timed("scene_device_vs_host_tables", bench_scene_device.run,
-              lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
-                        f"@{o['cameras']}x{o['steps']}")
-        timed("detector_in_step", bench_detector_step.run,
-              lambda o: f"det_cps256={o['det_cps_256']:.0f} "
-                        f"short_cps256={o['det_short_cps_256']:.0f} "
-                        f"overhead={o['det_short_overhead_256']:.1f}x "
-                        f"fusion={o['batch_fusion_speedup_256']:.2f}x")
-        timed("roofline_single", lambda: bench_roofline.run("single"),
-              lambda o: f"cells={len(o)}")
-        timed("roofline_multi", lambda: bench_roofline.run("multi"),
-              lambda o: f"cells={len(o)}")
+    def run_all():
+        if quick:
+            # CI smoke: every module above is imported (so benchmark
+            # imports can't silently rot) but only the cheap device-path
+            # entries run
+            timed("scene_device_vs_host_tables",
+                  lambda: bench_scene_device.run(quick=True),
+                  lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
+                            f"@{o['cameras']}x{o['steps']}")
+            timed("detector_in_step",
+                  lambda: bench_detector_step.run(quick=True),
+                  lambda o: f"det_cps={o['det_cps_8']:.0f} "
+                            f"short_cps={o['det_short_cps_8']:.0f} "
+                            f"mx={o['metrics_overhead_8']:.2f}x"
+                            f"@8x{o['steps']}")
+            timed("telemetry_stream",
+                  lambda: telemetry_stream(quick=True),
+                  lambda o: f"events={o['events']} "
+                            f"median_rank={o['median_rank']:.1f}")
+        else:
+            timed("fig1_2_orientation_gains", bench_orientation_gains.run,
+                  lambda o: f"dyn_over_fixed="
+                            f"+{o['dyn_over_fixed']*100:.1f}%")
+            timed("fig3_7_9_10_11_scene_stats", bench_scene_stats.run,
+                  lambda o: f"corr1hop={o['corr_1hop']:.2f}")
+            timed("fig12_13_14_e2e_sweeps", bench_e2e_sweeps.run,
+                  lambda o: f"fps1_win=+{o['fps1_win']*100:.1f}%")
+            timed("fig15_table2_sota", bench_sota.run,
+                  lambda o: f"madeye={o['madeye']:.3f}")
+            timed("table1_fixed_cameras", bench_fixed_cameras.run,
+                  lambda o: "madeye1_reduction="
+                            f"{o['madeye1']['reduction']:.1f}x")
+            timed("fig16_rank_quality", bench_rank_quality.run,
+                  lambda o: f"median_rank={o['detector_median_rank']:.1f} "
+                            f"fleet_det={o['fleet_det_median_rank']:.1f}")
+            timed("sec5_4_deepdive", bench_deepdive.run,
+                  lambda o: f"path_us={o['path_us']:.0f}")
+            timed("fleet_scale_controller", bench_fleet_scale.run,
+                  lambda o: f"speedup={o['speedup']:.0f}x"
+                            f"@{o['cameras']}x{o['steps']}")
+            timed("scene_device_vs_host_tables", bench_scene_device.run,
+                  lambda o: f"hetero_speedup={o['hetero_speedup']:.0f}x"
+                            f"@{o['cameras']}x{o['steps']}")
+            timed("detector_in_step", bench_detector_step.run,
+                  lambda o: f"det_cps256={o['det_cps_256']:.0f} "
+                            f"short_cps256={o['det_short_cps_256']:.0f} "
+                            f"overhead={o['det_short_overhead_256']:.1f}x "
+                            f"fusion={o['batch_fusion_speedup_256']:.2f}x "
+                            f"mx={o['metrics_overhead_256']:.2f}x")
+            timed("telemetry_stream",
+                  lambda: telemetry_stream(quick=False),
+                  lambda o: f"events={o['events']} "
+                            f"median_rank={o['median_rank']:.1f}")
+            timed("roofline_single", lambda: bench_roofline.run("single"),
+                  lambda o: f"cells={len(o)}")
+            timed("roofline_multi", lambda: bench_roofline.run("multi"),
+                  lambda o: f"cells={len(o)}")
+
+    trace_path = os.environ.get("BENCH_TRACE", "BENCH_trace.json")
+    with tracing(trace_path):
+        run_all()
 
     print("\nname,us_per_call,derived")
     for r in rows:
@@ -103,7 +178,9 @@ def main() -> None:
         else "BENCH_repro.json")
     with open(path, "w") as f:
         json.dump(rows, f, indent=2)
-    print(f"\nwrote {len(rows)} rows to {path}")
+    hist = append_history(rows, quick)
+    print(f"\nwrote {len(rows)} rows to {path}; trace -> {trace_path}; "
+          f"history -> {hist}")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,7 @@ from repro.fleet.state import (
     workload_spec,
 )
 from repro.fleet.step import FleetStepOut
+from repro.obs import MetricsSpec, span
 
 # the serving launcher's default 4-query workload, as spec-friendly
 # (model, object, task) triples — one definition shared by serve.py and
@@ -198,6 +199,12 @@ class FleetRunSpec:
     # is THE accuracy-vs-cost knob a sweep varies (paper §3.3's
     # "fruitful subset").
     shortlist_k: int | None = None
+    # in-scan telemetry (repro.obs): None/False = off — the episode
+    # compiles to the exact metrics-free program; True = full
+    # MetricsSpec; a dict/MetricsSpec picks metric families. Like
+    # `shard`, normalized to the dataclass on construction so the spec
+    # stays JSON-round-trippable.
+    metrics: MetricsSpec | None = None
 
     def __post_init__(self):
         object.__setattr__(
@@ -205,6 +212,16 @@ class FleetRunSpec:
             tuple(tuple(q) for q in self.workload))
         if isinstance(self.shard, dict):
             object.__setattr__(self, "shard", ShardSpec(**self.shard))
+        m = self.metrics
+        if m is True:
+            m = MetricsSpec()
+        elif m is False:
+            m = None
+        elif isinstance(m, dict):
+            m = MetricsSpec(**m)
+        if m is not None and not m.enabled:
+            m = None
+        object.__setattr__(self, "metrics", m)
 
     # -- object views ---------------------------------------------------
     def grid_obj(self) -> OrientationGrid:
@@ -224,6 +241,7 @@ class FleetRunSpec:
                      budget: BudgetConfig | None = None,
                      shard: ShardSpec | None = None,
                      shortlist_k: int | None = None,
+                     metrics: MetricsSpec | bool | None = None,
                      **provider_kwargs) -> "FleetRunSpec":
         """Build a spec from the in-memory config objects the rest of
         the codebase passes around (the engine shims do)."""
@@ -235,7 +253,7 @@ class FleetRunSpec:
             grid={} if grid is None else dataclasses.asdict(grid),
             budget={} if budget is None else dataclasses.asdict(budget),
             provider_kwargs=provider_kwargs, shard=shard,
-            shortlist_k=shortlist_k)
+            shortlist_k=shortlist_k, metrics=metrics)
 
     # -- JSON round trip ------------------------------------------------
     def to_json(self, **dumps_kwargs) -> str:
@@ -265,12 +283,17 @@ class PreparedFleetRun:
     mesh: Any
     build_s: float
 
-    def episode(self, provider=None, state=None):
+    def episode(self, provider=None, state=None, metrics=None):
+        """Run the unified scan. With metrics enabled (spec.metrics, or
+        the `metrics` override — benchmarks A/B the same prepared run)
+        returns (state, out, FleetMetrics dict); (state, out)
+        otherwise."""
         return run_fleet_episode(
             self.cfg, self.wl, self.statics,
             self.state if state is None else state,
             self.provider if provider is None else provider,
-            mesh=self.mesh)
+            mesh=self.mesh,
+            metrics=self.spec.metrics if metrics is None else metrics)
 
 
 def prepare_fleet_run(spec: FleetRunSpec, *, mesh=None) -> PreparedFleetRun:
@@ -287,9 +310,11 @@ def prepare_fleet_run(spec: FleetRunSpec, *, mesh=None) -> PreparedFleetRun:
         # tables/scene providers have no per-window model) fail loudly
         kwargs["shortlist_k"] = spec.shortlist_k
     t0 = time.perf_counter()
-    provider, state = factory(
-        grid, workload, cfg, n_cameras=spec.n_cameras,
-        n_steps=spec.n_steps, seed=spec.seed, **kwargs)
+    with span("fleet/build", provider=spec.provider,
+              n_cameras=spec.n_cameras):
+        provider, state = factory(
+            grid, workload, cfg, n_cameras=spec.n_cameras,
+            n_steps=spec.n_steps, seed=spec.seed, **kwargs)
     build_s = time.perf_counter() - t0
     if mesh is None and spec.shard is not None:
         mesh = spec.shard.build_mesh()
@@ -304,9 +329,10 @@ class FleetResult:
     """Typed result of one fleet episode.
 
     Host-side summaries (JSON-round-trippable) plus, when produced by
-    `run_fleet`, the raw device outputs: final `state` (FleetState) and
-    `out` (FleetStepOut, leaves [E, F, ...]) — those two are dropped by
-    `to_json`/`from_json`."""
+    `run_fleet`, the raw device outputs: final `state` (FleetState),
+    `out` (FleetStepOut, leaves [E, F, ...]) and — with spec.metrics
+    enabled — `metrics` (FleetMetrics dict, leaves [E, ...]); those
+    three are dropped by `to_json`/`from_json`."""
     spec: FleetRunSpec
     n_cameras: int
     n_steps: int
@@ -315,22 +341,26 @@ class FleetResult:
     chosen: tuple               # [E][F] chosen orientation cell ids
     frames_sent: tuple          # [E] frames shipped fleet-wide
     mean_shape: float           # mean explored-shape size
-    timings: dict               # build_s, episode_s (incl. jit compile)
+    timings: dict               # build_s, compile_s, steady_s, episode_s
     state: FleetState | None = None
     out: FleetStepOut | None = None
+    metrics: dict | None = None
 
     @property
     def camera_steps_per_s(self) -> float:
-        return self.n_cameras * self.n_steps / max(
-            self.timings.get("episode_s", 0.0), 1e-9)
+        # steady-state throughput: jit compile is a one-off cost, so it
+        # must not dilute the rate (older results only carry episode_s)
+        t = self.timings.get("steady_s",
+                             self.timings.get("episode_s", 0.0))
+        return self.n_cameras * self.n_steps / max(t, 1e-9)
 
     def to_json(self, **dumps_kwargs) -> str:
         # drop the device pytrees BEFORE asdict: asdict deep-copies every
-        # leaf it recurses into, which for state/out would be a full
-        # device->host copy of all per-step outputs just to discard it
+        # leaf it recurses into, which for state/out/metrics would be a
+        # full device->host copy of all per-step outputs to discard it
         d = dataclasses.asdict(
-            dataclasses.replace(self, state=None, out=None))
-        d.pop("state"), d.pop("out")
+            dataclasses.replace(self, state=None, out=None, metrics=None))
+        d.pop("state"), d.pop("out"), d.pop("metrics")
         d["spec"] = json.loads(self.spec.to_json())
         return json.dumps(d, default=_jsonable, **dumps_kwargs)
 
@@ -347,17 +377,48 @@ class FleetResult:
 def run_fleet(spec: FleetRunSpec, *, mesh=None) -> FleetResult:
     """THE fleet entry point: spec in, typed result out.
 
-    Builds the named provider through the registry, runs the whole
-    episode as one jit'd scan (sharded per spec.shard / `mesh`), and
-    summarizes. The first call for a given (provider statics, shapes)
-    pays jit compile inside timings["episode_s"]; rerun the spec (or use
-    `prepare_fleet_run` + `.episode()`) for steady-state numbers."""
+    Builds the named provider through the registry, AOT-lowers and
+    compiles the ONE jit'd episode scan (timed as
+    timings["compile_s"]), then executes the compiled program (timed as
+    timings["steady_s"]). timings["episode_s"] stays their sum for
+    back-compat; `camera_steps_per_s` is computed from steady_s alone
+    so compile never dilutes throughput. Sharded per spec.shard /
+    `mesh`; spec.metrics turns on the in-scan FleetMetrics, attached as
+    `result.metrics`."""
     import jax
 
+    from repro.fleet.runner import _episode, shard_fleet
+
     prep = prepare_fleet_run(spec, mesh=mesh)
+    state, provider = prep.state, prep.provider
+    if prep.mesh is not None:
+        state = shard_fleet(state, prep.mesh)
+        provider = provider.shard(prep.mesh)
+    mspec = spec.metrics
+
+    # explicit AOT split: lower+compile is the one-off cost, the
+    # compiled call is steady-state (static argnames — cfg, wl, the
+    # MetricsSpec — are baked in and omitted from the compiled call)
     t0 = time.perf_counter()
-    state, out = jax.block_until_ready(prep.episode())
-    episode_s = time.perf_counter() - t0
+    with span("fleet/compile", provider=spec.provider,
+              metrics=mspec is not None):
+        compiled = _episode.lower(
+            prep.cfg, prep.wl, prep.statics, state, provider,
+            metrics=mspec).compile()
+    compile_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    with span("fleet/steady", provider=spec.provider,
+              n_cameras=spec.n_cameras):
+        res = jax.block_until_ready(compiled(prep.statics, state, provider))
+    steady_s = time.perf_counter() - t0
+
+    if mspec is not None:
+        state, (out, ex) = res
+        fleet_metrics = ex["metrics"]
+    else:
+        state, out = res
+        fleet_metrics = None
 
     acc = np.asarray(out.acc_chosen, np.float32)        # [E, F]
     sent = np.asarray(out.sent)                         # [E, F, N]
@@ -370,5 +431,7 @@ def run_fleet(spec: FleetRunSpec, *, mesh=None) -> FleetResult:
                      for row in np.asarray(out.chosen)),
         frames_sent=tuple(int(s) for s in sent.sum(axis=(1, 2))),
         mean_shape=float(np.asarray(out.n_explored, np.float32).mean()),
-        timings={"build_s": prep.build_s, "episode_s": episode_s},
-        state=state, out=out)
+        timings={"build_s": prep.build_s, "compile_s": compile_s,
+                 "steady_s": steady_s,
+                 "episode_s": compile_s + steady_s},
+        state=state, out=out, metrics=fleet_metrics)

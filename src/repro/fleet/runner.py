@@ -720,9 +720,10 @@ def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
 # THE episode: one scan body for every provider
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg", "wl", "collect_obs"))
+@partial(jax.jit, static_argnames=("cfg", "wl", "collect_obs", "metrics"))
 def _episode(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
-             state: FleetState, provider, *, collect_obs: bool = False):
+             state: FleetState, provider, *, collect_obs: bool = False,
+             metrics=None):
     """The unified scan body: provider.observe generates this step's
     FleetObs from (provider carry, controller state, scanned xs), then
     fleet_step consumes it. Every provider — host tables, device scenes,
@@ -732,15 +733,35 @@ def _episode(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
     collect_obs additionally records camera 0's observation tables
     (per-camera [F, ...] leaves sliced to [0]) so a scene episode can be
     re-materialized as EpisodeTables — see materialize_scene_tables.
+
+    metrics (a static repro.obs.MetricsSpec, part of the jit cache key)
+    additionally emits a per-step FleetMetrics dict from *inside* the
+    scan (shortlist hit-rate, chosen-vs-oracle rank, EWMA labels, budget
+    counters — repro.obs.metrics.step_metrics); when None/disabled this
+    function compiles to the exact metrics-free program, so decisions
+    are bit-identical either way (pinned by tests/test_obs.py).
+
+    With either extra enabled, ys becomes (FleetStepOut, extras dict
+    keyed "obs"/"metrics"); bare FleetStepOut otherwise.
     """
+    if metrics is not None and not metrics.enabled:
+        metrics = None
+
     def body(carry, xs):
         st, pc = carry
         pc, obs = provider.observe(cfg, wl, pc, st, xs)
-        st, out = fleet_step(cfg, wl, statics, st, obs)
-        if collect_obs:
-            rec = {f: getattr(obs, f)[0] for f in _TABLE_FIELDS}
-            return (st, pc), (out, rec)
-        return (st, pc), out
+        st2, out = fleet_step(cfg, wl, statics, st, obs)
+        if collect_obs or metrics is not None:
+            ex = {}
+            if collect_obs:
+                ex["obs"] = {f: getattr(obs, f)[0] for f in _TABLE_FIELDS}
+            if metrics is not None:
+                from repro.obs.metrics import step_metrics
+
+                ex["metrics"] = step_metrics(metrics, cfg, provider,
+                                             st, st2, obs, out)
+            return (st2, pc), (out, ex)
+        return (st2, pc), out
 
     (state, _), ys = jax.lax.scan(
         body, (state, provider.init_carry(state)), provider.scan_xs())
@@ -760,8 +781,9 @@ def materialize_scene_tables(cfg: FleetConfig, wl: WorkloadSpec,
     legally round reductions differently. That costs one episode at full
     F; for cheap replay tables where bit-exactness doesn't matter, build
     the provider/state at n_cameras=1 and materialize that instead."""
-    _, (out, rec) = _episode(cfg, wl, statics, state, provider,
-                             collect_obs=True)
+    _, (out, ex) = _episode(cfg, wl, statics, state, provider,
+                            collect_obs=True)
+    rec = ex["obs"]
     mbps, rtt = provider.mbps, provider.rtt
     if mbps.ndim == 2:
         mbps = mbps[:, 0]
@@ -773,8 +795,7 @@ def materialize_scene_tables(cfg: FleetConfig, wl: WorkloadSpec,
 
 def run_fleet_episode(cfg: FleetConfig, wl: WorkloadSpec,
                       statics: FleetStatics, state: FleetState,
-                      provider, *, mesh=None
-                      ) -> tuple[FleetState, FleetStepOut]:
+                      provider, *, mesh=None, metrics=None):
     """Run the whole episode in one jit'd scan.
 
     `provider` is any ObservationProvider — the shipped EpisodeTables /
@@ -786,10 +807,21 @@ def run_fleet_episode(cfg: FleetConfig, wl: WorkloadSpec,
     axis first, and the scan runs SPMD across devices, like
     launch/serve.py's batched inference path.
 
+    `metrics` (a repro.obs.MetricsSpec) turns on in-scan telemetry; the
+    return becomes (final state, FleetStepOut, FleetMetrics dict with
+    leaves [E, ...]). With it None/disabled the compiled program is the
+    exact metrics-free one and the return stays a 2-tuple.
+
     Prefer `repro.fleet.api.run_fleet(spec)` unless you are composing
     providers/state yourself (parity tests and benchmarks do).
     """
     if mesh is not None:
         state = shard_fleet(state, mesh)
         provider = provider.shard(mesh)
-    return _episode(cfg, wl, statics, state, provider)
+    if metrics is not None and not metrics.enabled:
+        metrics = None
+    if metrics is None:
+        return _episode(cfg, wl, statics, state, provider)
+    state, (out, ex) = _episode(cfg, wl, statics, state, provider,
+                                metrics=metrics)
+    return state, out, ex["metrics"]

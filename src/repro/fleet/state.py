@@ -27,6 +27,11 @@ from repro.kernels.neighbor_score.ops import geometry_arrays
 
 NET_WINDOW = 5
 NET_DEFAULT_MBPS = 24.0
+# last_visit sentinel for cells never explored: far enough in the past
+# that staleness bonuses saturate immediately. Shared with the in-scan
+# metrics (repro.obs.metrics counts `last_visit > NEVER_VISITED` as
+# exploration coverage), so the two can't drift apart.
+NEVER_VISITED = -1000
 
 
 # ---------------------------------------------------------------------------
@@ -272,7 +277,7 @@ def init_fleet(grid: OrientationGrid, n_cameras: int,
         pred_var=jnp.full((f,), 0.25, jnp.float32),
         saw_objects=jnp.ones((f,), bool),
         step_idx=z_fn(dtype=jnp.int32),
-        last_visit=jnp.full((f, n), -1000, jnp.int32),
+        last_visit=jnp.full((f, n), NEVER_VISITED, jnp.int32),
         net_samples=z_fn(NET_WINDOW),
         net_count=z_fn(dtype=jnp.int32),
         rtt=jnp.full((f,), 0.02, jnp.float32),

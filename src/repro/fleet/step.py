@@ -305,6 +305,23 @@ def _rank(wl: WorkloadSpec, counts_g, areas_g, visits, explored):
     return total / len(wl.pair_idx)
 
 
+def gather_at_zoom(x: jnp.ndarray, zoom_idx: jnp.ndarray,
+                   trailing: int = 0) -> jnp.ndarray:
+    """Gather an observation table at each cell's chosen zoom.
+
+    x is [N, Z, ...] (fleet-shared tables) or [F, N, Z, ...] (per-camera
+    scenes) with `trailing` extra dims; zoom_idx [F, N]. Returns
+    [F, N, ...]. The step's observe-at-chosen-zoom gather, shared with
+    the in-scan metrics (repro.obs.metrics grades the chosen cell
+    against the same oracle row the step saw).
+    """
+    f, n = zoom_idx.shape
+    cell_ax = jnp.arange(n)[None, :]
+    if x.ndim == 2 + trailing:                      # shared across fleet
+        return x[cell_ax, zoom_idx]
+    return x[jnp.arange(f)[:, None], cell_ax, zoom_idx]
+
+
 # ---------------------------------------------------------------------------
 # the timestep
 # ---------------------------------------------------------------------------
@@ -387,12 +404,8 @@ def fleet_step(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
     # 5. observe at (cell, chosen zoom); tables are either fleet-shared
     # [N, Z, ...] or per-camera [F, N, Z, ...] (the scene-backed provider
     # generates the latter inside the scan) — rank decides the gather
-    cell_ax = jnp.arange(n)[None, :]
-
     def at_zoom(x, trailing=0):
-        if x.ndim == 2 + trailing:                  # shared across fleet
-            return x[cell_ax, zoom_idx]
-        return x[arange_f[:, None], cell_ax, zoom_idx]
+        return gather_at_zoom(x, zoom_idx, trailing)
 
     counts_g = at_zoom(obs.counts, 1)               # [F, N, P]
     areas_g = at_zoom(obs.areas, 1)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.kernels.crop_patchify.crop_patchify import crop_patchify_batch
 from repro.kernels.crop_patchify.ref import crop_patchify_ref
+from repro.obs import span
 
 SUBLANES = 8
 
@@ -53,11 +54,14 @@ def crop_patchify(pos, size, kind, oid, windows, patch_params, *,
     k = windows.shape[-2]
     if block_k is not None and (block_k <= 0 or k % block_k != 0):
         raise ValueError(f"block_k={block_k} must divide the {k} windows")
-    return _crop_patchify(pos, size, kind, oid, windows, patch_params,
-                          noise, patch=patch, res=res,
-                          min_visible=min_visible, dtype=dtype,
-                          block_k=block_k, use_kernel=use_kernel,
-                          interpret=interpret)
+    # host span: times trace/dispatch at this entry point (execution is
+    # async); a no-op unless a repro.obs tracer is active
+    with span("ops/crop_patchify", k=k, use_kernel=use_kernel):
+        return _crop_patchify(pos, size, kind, oid, windows, patch_params,
+                              noise, patch=patch, res=res,
+                              min_visible=min_visible, dtype=dtype,
+                              block_k=block_k, use_kernel=use_kernel,
+                              interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("patch", "res", "min_visible", "dtype",

@@ -14,12 +14,20 @@ an N-camera fleet through the unified experiment API
   detector  scene + the approximation detector in the loop: candidate
             crops rendered and scored by the network inside the scan
 
+`--telemetry PATH|-` streams each fleet run as JSON-lines telemetry
+events (repro.obs.events schema: run_start / steps chunks with
+per-camera health / run_end) to a file or stdout, with the in-scan
+FleetMetrics enabled on the run so events carry EWMA labels, shortlist
+hit-rates, and chosen-rank medians.
+
   PYTHONPATH=src python -m repro.launch.serve --fps 5 --duration 20
   PYTHONPATH=src python -m repro.launch.serve --fleet 4 --provider scene
+  PYTHONPATH=src python -m repro.launch.serve --fleet 4 --telemetry -
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -78,9 +86,11 @@ def serve(fps: float, duration: float, *, seed: int = 3,
           fleet: int = 0, provider: str = "tables",
           fleet_scene: int = 0, fleet_detector: int = 0,
           shortlist_k: int | None = None,
+          telemetry: str | None = None,
           grid: OrientationGrid = DEFAULT_GRID,
           workload: Workload = DEFAULT_WORKLOAD):
     from repro.fleet import run_fleet
+    from repro.obs import episode_events, write_events
 
     for name, val in (("--fleet", fleet), ("--fleet-scene", fleet_scene),
                       ("--fleet-detector", fleet_detector)):
@@ -127,14 +137,20 @@ def serve(fps: float, duration: float, *, seed: int = 3,
                            budget=budget,
                            substrate=(video, tables, acc, trace),
                            shortlist_k=shortlist_k)
+        if telemetry is not None:
+            # telemetry events enrich from the in-scan FleetMetrics
+            spec = dataclasses.replace(spec, metrics=True)
         r = run_fleet(spec)
         wall = r.timings["build_s"] + r.timings["episode_s"]
         print(f"fleet x{n:<4d} [{name}]: acc={r.accuracy:.3f} "
               f"mean shape {r.mean_shape:.1f}, "
               f"sent/step={sum(r.frames_sent)/(r.n_steps*n):.1f}, "
               f"{r.n_steps} steps in {wall:.2f}s end-to-end incl. jit "
-              f"compile ({n * r.n_steps / wall:.0f} camera-steps/s; "
-              f"see benchmarks/ for steady-state)")
+              f"compile ({r.camera_steps_per_s:.0f} steady camera-steps/s)")
+        if telemetry is not None:
+            n_ev = write_events(episode_events(r), telemetry)
+            if telemetry != "-":
+                print(f"  telemetry: {n_ev} events -> {telemetry}")
 
     for scheme in ("one_time_fixed", "best_fixed", "best_dynamic",
                    "panoptes", "tracking", "ucb1"):
@@ -164,6 +180,12 @@ def main():
                     help="detector provider: candidate windows rendered"
                          " + scored per camera-step (multiple of the "
                          "zoom count; default all = exhaustive)")
+    ap.add_argument("--telemetry", type=str, default=None,
+                    metavar="PATH|-",
+                    help="stream each fleet run as JSONL telemetry "
+                         "events (repro.obs.events schema) to a file "
+                         "(append) or stdout (-); enables the in-scan "
+                         "FleetMetrics on the run")
     ap.add_argument("--fleet-scene", type=int, default=0,
                     help="[deprecated] alias for "
                          "`--fleet N --provider scene`")
@@ -176,7 +198,7 @@ def main():
           pipelined=args.pipelined, fleet=args.fleet,
           provider=args.provider, fleet_scene=args.fleet_scene,
           fleet_detector=args.fleet_detector,
-          shortlist_k=args.shortlist_k)
+          shortlist_k=args.shortlist_k, telemetry=args.telemetry)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import DetectorConfig
 from repro.core import ewma
 from repro.models import detector as det
+from repro.obs import span
 
 
 # Module-level jits, NOT per-engine lambdas: a fresh `jax.jit(lambda ...)`
@@ -140,7 +141,8 @@ def run_fleet_controller(video, workload, tables, budget, trace, *,
         grid=video.grid, workload=workload, budget=budget,
         video=video, tables=tables, trace=trace, acc_table=acc_table,
         approx_miss=approx_miss)
-    return prepare_fleet_run(spec, mesh=mesh).episode()
+    with span("engine/fleet_controller", provider="tables"):
+        return prepare_fleet_run(spec, mesh=mesh).episode()
 
 
 def run_fleet_scene_controller(grid, workload, budget, *, n_cameras: int,
@@ -161,7 +163,8 @@ def run_fleet_scene_controller(grid, workload, budget, *, n_cameras: int,
     spec = FleetRunSpec.from_objects(
         "scene", n_cameras=n_cameras, n_steps=n_steps, seed=seed,
         grid=grid, workload=workload, budget=budget, **scene_kwargs)
-    return prepare_fleet_run(spec, mesh=mesh).episode()
+    with span("engine/fleet_controller", provider="scene"):
+        return prepare_fleet_run(spec, mesh=mesh).episode()
 
 
 def run_fleet_detector_controller(grid, workload, budget, *,
@@ -191,7 +194,8 @@ def run_fleet_detector_controller(grid, workload, budget, *,
         "detector", n_cameras=n_cameras, n_steps=n_steps, seed=seed,
         grid=grid, workload=workload, budget=budget,
         det_cfg=det_cfg, det_params=det_params, **scene_kwargs)
-    return prepare_fleet_run(spec, mesh=mesh).episode()
+    with span("engine/fleet_controller", provider="detector"):
+        return prepare_fleet_run(spec, mesh=mesh).episode()
 
 
 @partial(jax.jit, static_argnames=("k_send",))

@@ -1,0 +1,361 @@
+"""Fleet telemetry layer (repro.obs).
+
+Pins the three observability channels and their contracts:
+
+  * in-scan FleetMetrics are decision-invisible — metrics off/on give
+    bit-identical chosen orientations and pred_acc across all three
+    providers, and the steady-state overhead with them on stays < 15%;
+  * the in-scan `chosen_rank`/`shortlist_hit` outputs match their host
+    replay definitions (bench_rank_quality._chosen_rank; exhaustive
+    shortlists always hit);
+  * span traces export well-formed Chrome trace JSON and cost nothing
+    when inactive;
+  * the JSONL telemetry event schema round-trips and validates, both
+    via the API and through `serve --fleet --telemetry -`.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.fleet import (
+    FleetResult,
+    FleetRunSpec,
+    fleet_config,
+    fleet_statics,
+    make_detector_provider,
+    materialize_scene_tables,
+    prepare_fleet_run,
+    run_fleet,
+    run_fleet_episode,
+    workload_spec,
+)
+from repro.obs import (
+    METRIC_KEYS,
+    MetricsSpec,
+    Tracer,
+    active_tracer,
+    episode_events,
+    median_valid_rank,
+    read_events,
+    span,
+    summarize_metrics,
+    tracing,
+    validate_event,
+    write_events,
+)
+
+
+def _run(provider, metrics=None, **kw):
+    spec = FleetRunSpec(provider=provider, n_cameras=2, n_steps=5,
+                        budget={"fps": 2.0}, metrics=metrics, **kw)
+    return run_fleet(spec)
+
+
+# ---------------------------------------------------------------------------
+# MetricsSpec + decision parity
+# ---------------------------------------------------------------------------
+
+def test_metrics_spec_keys_and_normalization():
+    assert MetricsSpec().keys() == tuple(
+        k for ks in METRIC_KEYS.values() for k in ks)
+    assert MetricsSpec(enabled=False).keys() == ()
+    assert MetricsSpec(rank=False).keys() == (
+        "ewma_label_mean", "frames_sent", "k_send", "n_explored",
+        "cells_visited", "shortlist_hit")
+    # the spec field normalizes bools/dicts and round-trips JSON
+    assert FleetRunSpec(metrics=True).metrics == MetricsSpec()
+    assert FleetRunSpec(metrics=False).metrics is None
+    assert FleetRunSpec(metrics={"enabled": False}).metrics is None
+    s = FleetRunSpec(metrics={"budget": False})
+    s2 = FleetRunSpec.from_json(s.to_json())
+    assert s2.metrics == MetricsSpec(budget=False)
+
+
+@pytest.mark.parametrize("provider,kw", [
+    ("tables", {}),
+    ("scene", {}),
+    ("detector", {"shortlist_k": 18}),
+])
+def test_metrics_off_on_decision_parity(provider, kw):
+    """The acceptance gate: metrics=off compiles the exact prior scan,
+    metrics=on must not perturb a single decision."""
+    off = _run(provider, metrics=None, **kw)
+    on = _run(provider, metrics=True, **kw)
+    assert np.array_equal(np.asarray(off.out.chosen),
+                          np.asarray(on.out.chosen))
+    assert np.array_equal(np.asarray(off.out.pred_acc),
+                          np.asarray(on.out.pred_acc))
+    assert off.metrics is None
+    assert sorted(on.metrics) == sorted(MetricsSpec().keys())
+    e, f = on.n_steps, on.n_cameras
+    assert all(np.asarray(v).shape[:2] == (e, f)
+               for v in on.metrics.values())
+
+
+def test_metric_group_gating_shrinks_pytree():
+    r = _run("scene", metrics={"ewma": False, "rank": False})
+    assert sorted(r.metrics) == sorted(
+        MetricsSpec(ewma=False, rank=False).keys())
+
+
+def test_budget_metrics_match_step_outputs():
+    r = _run("scene", metrics=True)
+    out_sent = np.asarray(r.out.sent).sum(-1)
+    assert np.array_equal(np.asarray(r.metrics["frames_sent"]), out_sent)
+    assert np.array_equal(np.asarray(r.metrics["k_send"]),
+                          np.asarray(r.out.k_send))
+    visited = np.asarray(r.metrics["cells_visited"])
+    assert np.all(np.diff(visited, axis=0) >= 0)          # monotone
+    assert np.all(visited >= 1)
+
+
+# ---------------------------------------------------------------------------
+# shortlist hit-rate + chosen rank semantics
+# ---------------------------------------------------------------------------
+
+def _detector_run(shortlist_k, n_steps=6):
+    from repro.core import DEFAULT_GRID
+    from repro.core.tradeoff import BudgetConfig
+
+    wl = FleetRunSpec(budget={"fps": 2.0}).workload_obj()
+    cfg = fleet_config(DEFAULT_GRID, BudgetConfig(fps=2.0))
+    spec = workload_spec(wl)
+    statics = fleet_statics(DEFAULT_GRID)
+    provider, st0 = make_detector_provider(
+        DEFAULT_GRID, wl, cfg, n_cameras=1, n_steps=n_steps,
+        scene_seeds=[3], shortlist_k=shortlist_k)
+    return cfg, spec, statics, st0, provider
+
+
+def test_shortlist_hit_rate_one_when_exhaustive():
+    """shortlist_k = N*Z keeps every window, so the oracle-best cell is
+    in the candidate set at every step by construction."""
+    cfg, spec, statics, st0, provider = _detector_run(None)
+    c = provider.scene.windows.shape[0]   # already all N*Z windows
+    assert provider.shortlist_k == c
+    _, _, m = run_fleet_episode(cfg, spec, statics, st0, provider,
+                                metrics=MetricsSpec())
+    assert np.all(np.asarray(m["shortlist_hit"]) == 1.0)
+
+
+def test_shortlist_hit_rate_bounded_when_sparse():
+    cfg, spec, statics, st0, provider = _detector_run(18)
+    _, _, m = run_fleet_episode(cfg, spec, statics, st0, provider,
+                                metrics=MetricsSpec())
+    hit = np.asarray(m["shortlist_hit"])
+    assert hit.shape == (6, 1)
+    assert np.all((hit == 0.0) | (hit == 1.0))
+
+
+def test_chosen_rank_matches_host_replay():
+    """The in-scan chosen_rank IS bench_rank_quality's replay metric:
+    grade the same episode both ways and require equality step for
+    step (None on the host side == 0 in-scan)."""
+    from benchmarks.bench_rank_quality import _chosen_rank
+
+    cfg, spec, statics, st0, provider = _detector_run(None, n_steps=8)
+    scene = provider.scene
+    _, out, m = run_fleet_episode(cfg, spec, statics, st0, scene,
+                                  metrics=MetricsSpec())
+    acc = np.asarray(materialize_scene_tables(
+        cfg, spec, statics, st0, scene).acc_true)
+    got = np.asarray(m["chosen_rank"])[:, 0]
+    want = [_chosen_rank(acc, out, e) or 0 for e in range(8)]
+    assert got.tolist() == want
+    assert any(r > 0 for r in want)       # episode is actually gradable
+    assert median_valid_rank(got) == float(
+        np.median([r for r in want if r > 0]))
+
+
+def test_median_valid_rank_degenerate():
+    assert median_valid_rank(np.zeros((4, 2), np.int32)) == 0.0
+    assert median_valid_rank(np.array([0, 3, 1, 0, 2])) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# metrics overhead
+# ---------------------------------------------------------------------------
+
+def test_metrics_overhead_under_15_percent():
+    """Pinned acceptance bound: the full MetricsSpec adds < 15% to the
+    steady-state detector scan (quick-bench shape)."""
+    spec = FleetRunSpec(provider="detector", n_cameras=8, n_steps=3,
+                        seed=3, budget={"fps": 3.0},
+                        provider_kwargs={"scene_seeds": list(range(8))})
+    prep = prepare_fleet_run(spec)
+
+    def steady(metrics):
+        jax.block_until_ready(prep.episode(metrics=metrics))  # compile
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(prep.episode(metrics=metrics))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    base = steady(MetricsSpec(enabled=False))
+    with_m = steady(MetricsSpec())
+    assert with_m < 1.15 * base, (
+        f"metrics overhead {with_m / base:.2f}x exceeds 1.15x "
+        f"({base * 1e3:.1f}ms -> {with_m * 1e3:.1f}ms)")
+
+
+# ---------------------------------------------------------------------------
+# timings split + throughput floor
+# ---------------------------------------------------------------------------
+
+def test_run_fleet_timings_split():
+    r = _run("tables")
+    t = r.timings
+    assert set(t) == {"build_s", "compile_s", "steady_s", "episode_s"}
+    assert t["episode_s"] == t["compile_s"] + t["steady_s"]
+    assert t["compile_s"] > 0 and t["steady_s"] > 0
+    assert r.camera_steps_per_s == \
+        r.n_cameras * r.n_steps / max(t["steady_s"], 1e-9)
+
+
+def test_camera_steps_per_s_floor_and_fallback():
+    base = _run("tables")
+    # steady_s preferred; zero/absent timings hit the 1e-9 floor
+    # instead of dividing by zero
+    r = dataclasses.replace(base, timings={"steady_s": 0.0})
+    assert r.camera_steps_per_s == r.n_cameras * r.n_steps / 1e-9
+    r = dataclasses.replace(base, timings={})
+    assert r.camera_steps_per_s == r.n_cameras * r.n_steps / 1e-9
+    # legacy results (episode_s only) still report a rate
+    r = dataclasses.replace(base, timings={"episode_s": 2.0})
+    assert r.camera_steps_per_s == r.n_cameras * r.n_steps / 2.0
+    r = dataclasses.replace(
+        base, timings={"episode_s": 2.0, "steady_s": 0.5})
+    assert r.camera_steps_per_s == r.n_cameras * r.n_steps / 0.5
+
+
+def test_result_json_drops_metrics():
+    r = _run("tables", metrics=True)
+    r2 = FleetResult.from_json(r.to_json())
+    assert r2.metrics is None and r2.out is None and r2.state is None
+    assert r2.spec.metrics == MetricsSpec()
+    assert r2.accuracy == pytest.approx(r.accuracy)
+
+
+# ---------------------------------------------------------------------------
+# trace spans
+# ---------------------------------------------------------------------------
+
+def test_span_is_noop_without_tracer():
+    assert active_tracer() is None
+    with span("anything", x=1):
+        pass                              # shared nullcontext, no error
+    assert active_tracer() is None
+
+
+def test_tracing_records_chrome_events(tmp_path):
+    path = str(tmp_path / "trace.json")
+    with tracing(path) as tr:
+        with span("outer", provider="scene"):
+            with span("inner"):
+                pass
+    assert active_tracer() is None        # restored on exit
+    doc = json.load(open(path))
+    evs = doc["traceEvents"]
+    names = [e["name"] for e in evs]
+    assert names == ["inner", "outer"]    # completion order
+    for e in evs:
+        assert e["ph"] == "X" and e["dur"] >= 0 and "ts" in e
+    outer = evs[1]
+    assert outer["args"] == {"provider": "scene"}
+    assert tr.to_chrome()["traceEvents"] == evs
+
+
+def test_run_fleet_emits_fleet_spans(tmp_path):
+    path = str(tmp_path / "trace.json")
+    with tracing(path):
+        _run("tables")
+    names = {e["name"] for e in json.load(open(path))["traceEvents"]}
+    assert {"fleet/build", "fleet/compile", "fleet/steady"} <= names
+
+
+def test_tracer_non_json_args_stringified():
+    tr = Tracer()
+    with tr.span("s", arr=np.arange(3)):
+        pass
+    assert isinstance(tr.events[0]["args"]["arr"], str)
+
+
+# ---------------------------------------------------------------------------
+# JSONL telemetry events
+# ---------------------------------------------------------------------------
+
+def test_validate_event_rejects_malformed():
+    with pytest.raises(ValueError, match="unknown event type"):
+        validate_event({"event": "nope"})
+    with pytest.raises(ValueError, match="missing keys"):
+        validate_event({"event": "run_end", "schema": 1})
+    with pytest.raises(ValueError, match="cameras.health"):
+        validate_event({"event": "steps", "schema": 1, "step0": 0,
+                        "step1": 4, "acc_mean": 0.5, "frames_sent": 2,
+                        "cameras": {"acc_mean": [], "frames_sent": [],
+                                    "n_explored_mean": []}})
+
+
+def test_episode_events_schema_roundtrip(tmp_path):
+    r = _run("scene", metrics=True)
+    events = list(episode_events(r, chunk=2))
+    assert [e["event"] for e in events] == \
+        ["run_start"] + ["steps"] * 3 + ["run_end"]
+    start, steps, end = events[0], events[1], events[-1]
+    assert start["spec"]["provider"] == "scene"
+    assert start["metrics"] is True
+    assert (steps["step0"], steps["step1"]) == (0, 2)
+    cams = steps["cameras"]
+    assert len(cams["health"]) == r.n_cameras
+    assert set(cams["health"]) <= {"ok", "idle", "lagging"}
+    # metrics enrichment present when the run carried FleetMetrics
+    assert len(cams["ewma_label"]) == r.n_cameras
+    assert end["metrics_summary"]["shortlist_hit_rate"] == \
+        [1.0] * r.n_cameras
+    assert end["metrics_summary"] == summarize_metrics(r.metrics)
+    assert json.dumps(events) is not None  # JSON-native end to end
+
+    path = str(tmp_path / "tel.jsonl")
+    assert write_events(iter(events), path) == len(events)
+    assert read_events(path) == events
+    # append mode: a second run extends the log
+    write_events(iter(events), path)
+    assert len(read_events(path)) == 2 * len(events)
+
+
+def test_episode_events_requires_device_outputs():
+    r = FleetResult.from_json(_run("tables").to_json())
+    with pytest.raises(ValueError, match="stripped"):
+        next(episode_events(r))
+    with pytest.raises(ValueError, match="chunk"):
+        next(episode_events(_run("tables"), chunk=0))
+
+
+def test_serve_fleet_telemetry_subprocess():
+    """`serve --fleet 4 --telemetry -` end to end: stdout carries a
+    validatable JSONL event stream interleaved with the human log."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--fps", "2",
+         "--duration", "3", "--fleet", "4", "--telemetry", "-"],
+        capture_output=True, text=True, timeout=540, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    events = [validate_event(json.loads(ln))
+              for ln in proc.stdout.splitlines()
+              if ln.startswith("{")]
+    kinds = [e["event"] for e in events]
+    assert kinds[0] == "run_start" and kinds[-1] == "run_end"
+    assert "steps" in kinds
+    assert events[0]["n_cameras"] == 4
+    assert events[-1]["metrics_summary"] is not None
