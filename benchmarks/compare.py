@@ -12,6 +12,11 @@ artifacts) before the baseline is regenerated — both are
 reported so a PR reviewer sees the coverage change, neither can KeyError
 or block the job.
 
+Rows may also carry a "values" dict of named numeric results; `GATES`
+holds absolute ceilings for those (e.g. the in-scan distillation
+steady-state overhead must stay under 30% of the frozen detector leg) —
+a value gate fails on the fresh measurement alone, no baseline needed.
+
   python -m benchmarks.compare BENCH_repro.quick.json fresh.json \
       --max-slowdown 2.0
 """
@@ -20,6 +25,37 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+# absolute ceilings on named numeric results (row "values" dicts, see
+# run.py's timed(values=...)) — these gate a metric's VALUE, not its
+# wall time, so they fail even on a metric too new to have a baseline.
+# fleet_distill_overhead_pct: in-scan continual distillation must stay
+# under 30% steady-state overhead vs the frozen detector leg (the
+# repro.learn design point: training reuses the inference forward's
+# staged features, so learning adds head-conv work only).
+GATES = {
+    "fleet_distill_overhead_pct": 30.0,
+}
+
+
+def check_gates(fresh_values: dict, gates: dict | None = None) -> list:
+    """Gate named numeric results against absolute ceilings. Returns
+    failure strings; values absent from the fresh run are skipped (the
+    leg didn't run), unknown values are ignored (no accidental gate)."""
+    gates = GATES if gates is None else gates
+    failures = []
+    for name, vals in sorted(fresh_values.items()):
+        for key, val in sorted((vals or {}).items()):
+            if key not in gates:
+                continue
+            limit = gates[key]
+            status = "FAIL" if val > limit else "ok"
+            print(f"{status:4s} {name}.{key}: {val:.1f} "
+                  f"(gate <= {limit:.1f})")
+            if val > limit:
+                failures.append(f"{name}.{key}: {val:.1f} exceeds "
+                                f"gate {limit:.1f}")
+    return failures
 
 
 def compare(baseline: dict, fresh: dict, max_slowdown: float, *,
@@ -59,11 +95,13 @@ def compare(baseline: dict, fresh: dict, max_slowdown: float, *,
 
 
 def _load(path: str) -> tuple:
-    """-> ({name: us_per_call}, {name: derived-metric string})."""
+    """-> ({name: us_per_call}, {name: derived-metric string},
+    {name: values dict})."""
     with open(path) as f:
         rows = json.load(f)
     return ({r["name"]: float(r["us_per_call"]) for r in rows},
-            {r["name"]: r.get("derived") for r in rows})
+            {r["name"]: r.get("derived") for r in rows},
+            {r["name"]: r.get("values") for r in rows})
 
 
 def main(argv=None) -> int:
@@ -73,10 +111,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-slowdown", type=float, default=2.0,
                     help="fail when fresh/baseline exceeds this ratio")
     args = ap.parse_args(argv)
-    base_us, base_d = _load(args.baseline)
-    fresh_us, fresh_d = _load(args.fresh)
+    base_us, base_d, _ = _load(args.baseline)
+    fresh_us, fresh_d, fresh_v = _load(args.fresh)
     failures = compare(base_us, fresh_us, args.max_slowdown,
                        base_derived=base_d, fresh_derived=fresh_d)
+    failures += check_gates(fresh_v)
     if failures:
         print("\nbench regression:", file=sys.stderr)
         for msg in failures:

@@ -92,7 +92,7 @@ def main() -> None:
     quick = os.environ.get("BENCH_QUICK", "") == "1"
     rows = []
 
-    def timed(name, fn, derive):
+    def timed(name, fn, derive, values=None):
         t0 = time.perf_counter()
         with span(f"bench/{name}"):
             out = fn()
@@ -104,8 +104,12 @@ def main() -> None:
             # reports the absent metric as removed without failing
             print(f"[skipped] {name}: no measurement recorded")
             return None
-        rows.append({"name": name, "us_per_call": dt,
-                     "derived": derive(out)})
+        row = {"name": name, "us_per_call": dt, "derived": derive(out)}
+        if values is not None:
+            # named numeric results compare.py can gate by absolute
+            # limit (see compare.GATES), independent of wall time
+            row["values"] = {k: float(out[k]) for k in values}
+        rows.append(row)
         return out
 
     def run_all():
@@ -127,6 +131,14 @@ def main() -> None:
                   lambda: telemetry_stream(quick=True),
                   lambda o: f"events={o['events']} "
                             f"median_rank={o['median_rank']:.1f}")
+            timed("fleet_learning_curve",
+                  lambda: bench_rank_quality.fleet_learning_curve(
+                      quick=True),
+                  lambda o: f"rank={o['fleet_rank_start']:.1f}->"
+                            f"{o['fleet_rank_end']:.1f} "
+                            f"(frozen={o['fleet_rank_frozen']:.1f}) "
+                            f"ovh={o['fleet_distill_overhead_pct']:.0f}%",
+                  values=("fleet_distill_overhead_pct",))
         else:
             timed("fig1_2_orientation_gains", bench_orientation_gains.run,
                   lambda o: f"dyn_over_fixed="
@@ -143,6 +155,15 @@ def main() -> None:
             timed("fig16_rank_quality", bench_rank_quality.run,
                   lambda o: f"median_rank={o['detector_median_rank']:.1f} "
                             f"fleet_det={o['fleet_det_median_rank']:.1f}")
+            timed("fleet_learning_curve",
+                  lambda: bench_rank_quality.fleet_learning_curve(
+                      quick=False),
+                  lambda o: f"rank={o['fleet_rank_start']:.1f}->"
+                            f"{o['fleet_rank_end']:.1f} "
+                            f"(frozen={o['fleet_rank_frozen']:.1f}, "
+                            f"k9_end={o['fleet_rank_end_k9']:.1f}) "
+                            f"ovh={o['fleet_distill_overhead_pct']:.0f}%",
+                  values=("fleet_distill_overhead_pct",))
             timed("sec5_4_deepdive", bench_deepdive.run,
                   lambda o: f"path_us={o['path_us']:.0f}")
             timed("fleet_scale_controller", bench_fleet_scale.run,

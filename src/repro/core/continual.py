@@ -26,8 +26,6 @@ import numpy as np
 
 from repro.configs.base import DetectorConfig
 from repro.core.grid import OrientationGrid
-from repro.models import detector as det
-from repro.train import optim
 
 
 # ---------------------------------------------------------------------------
@@ -36,7 +34,15 @@ from repro.train import optim
 
 @dataclass
 class ReplayBuffer:
-    """Most-recent samples per orientation cell."""
+    """Most-recent samples per orientation cell.
+
+    LEGACY host-side reference: the in-scan counterpart is the
+    device-resident per-camera ring `repro.learn.pairs.PairBuffer`
+    (fixed-shape, rides the episode scan carry). This dict-based buffer
+    remains the reference implementation of the paper's
+    orientation-balanced replay (`balanced_counts`/`sample_balanced`
+    below), which the in-scan ring deliberately does not attempt —
+    balancing needs host-side bookkeeping across retraining windows."""
     n_cells: int
     capacity_per_cell: int = 32
     store: dict = field(default_factory=dict)   # cell -> list of samples
@@ -96,7 +102,10 @@ def sample_balanced(buffer: ReplayBuffer, window_counts: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Fine-tune step (frozen backbone, heads-only AdamW)
+# Fine-tune step (frozen backbone, heads-only AdamW) — delegates to
+# repro.learn.loop so the offline and in-scan paths share ONE update
+# rule (learn.loop.optimizer_apply); this module keeps only the jit
+# wrapper for back-compat.
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("cfg", "lr"))
@@ -104,18 +113,14 @@ def finetune_step(params, opt_state, cfg: DetectorConfig, images, gt_boxes,
                   gt_classes, gt_valid, *, lr: float = 1e-3):
     """One continual-learning gradient step. Returns (params', state',
     loss)."""
-    def loss_fn(p):
-        return det.detector_loss(p, cfg, images, gt_boxes, gt_classes,
-                                 gt_valid, freeze_backbone=True)
+    from repro.learn.loop import finetune_update
 
-    loss, grads = jax.value_and_grad(loss_fn)(params)
-    mask = det.head_params_mask(params)
-    params, opt_state = optim.adamw_update(
-        params, grads, opt_state, lr=lr, mask=mask, weight_decay=1e-4)
-    return params, opt_state, loss
+    return finetune_update(params, opt_state, cfg, images, gt_boxes,
+                           gt_classes, gt_valid, lr=lr)
 
 
 def init_finetune(params):
     """Optimizer state sized to the heads only (97% state savings)."""
-    mask = det.head_params_mask(params)
-    return optim.adamw_init(params, mask)
+    from repro.learn.loop import init_finetune_state
+
+    return init_finetune_state(params)

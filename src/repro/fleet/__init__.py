@@ -19,6 +19,10 @@ Python call).
                 string-keyed provider registry, declarative FleetRunSpec
                 (+ ShardSpec), run_fleet(spec) -> FleetResult
 
+In-scan continual distillation (paper §3.4) plugs in through
+`FleetRunSpec(provider="detector", distill=...)` — see repro.learn; the
+DistillSpec is re-exported here for convenience.
+
 The one-call entry point:
 
     from repro.fleet import FleetRunSpec, run_fleet
@@ -65,3 +69,4 @@ from repro.fleet.api import (
     register_provider,
     run_fleet,
 )
+from repro.learn.spec import DistillSpec

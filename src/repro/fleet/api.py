@@ -205,8 +205,17 @@ class FleetRunSpec:
     # `shard`, normalized to the dataclass on construction so the spec
     # stays JSON-round-trippable.
     metrics: MetricsSpec | None = None
+    # in-scan continual distillation (repro.learn, paper §3.4):
+    # None/False = frozen params — the episode compiles to the exact
+    # pre-learning program; True = default DistillSpec; a
+    # dict/DistillSpec picks optimizer/lr/cadence/ring. Detector
+    # provider only (it owns the per-window model). Normalized like
+    # `metrics`, so the spec stays JSON-round-trippable.
+    distill: Any = None
 
     def __post_init__(self):
+        from repro.learn.spec import normalize_distill
+
         object.__setattr__(
             self, "workload",
             tuple(tuple(q) for q in self.workload))
@@ -222,6 +231,8 @@ class FleetRunSpec:
         if m is not None and not m.enabled:
             m = None
         object.__setattr__(self, "metrics", m)
+        object.__setattr__(self, "distill",
+                           normalize_distill(self.distill))
 
     # -- object views ---------------------------------------------------
     def grid_obj(self) -> OrientationGrid:
@@ -242,6 +253,7 @@ class FleetRunSpec:
                      shard: ShardSpec | None = None,
                      shortlist_k: int | None = None,
                      metrics: MetricsSpec | bool | None = None,
+                     distill: Any = None,
                      **provider_kwargs) -> "FleetRunSpec":
         """Build a spec from the in-memory config objects the rest of
         the codebase passes around (the engine shims do)."""
@@ -253,7 +265,7 @@ class FleetRunSpec:
             grid={} if grid is None else dataclasses.asdict(grid),
             budget={} if budget is None else dataclasses.asdict(budget),
             provider_kwargs=provider_kwargs, shard=shard,
-            shortlist_k=shortlist_k, metrics=metrics)
+            shortlist_k=shortlist_k, metrics=metrics, distill=distill)
 
     # -- JSON round trip ------------------------------------------------
     def to_json(self, **dumps_kwargs) -> str:
@@ -309,6 +321,10 @@ def prepare_fleet_run(spec: FleetRunSpec, *, mesh=None) -> PreparedFleetRun:
         # first-class fast-path knob; factories that don't take it (the
         # tables/scene providers have no per-window model) fail loudly
         kwargs["shortlist_k"] = spec.shortlist_k
+    if spec.distill is not None:
+        # in-scan distillation — like shortlist_k, factories without a
+        # per-window model to train reject it loudly
+        kwargs["distill"] = spec.distill
     t0 = time.perf_counter()
     with span("fleet/build", provider=spec.provider,
               n_cameras=spec.n_cameras):
@@ -331,8 +347,9 @@ class FleetResult:
     Host-side summaries (JSON-round-trippable) plus, when produced by
     `run_fleet`, the raw device outputs: final `state` (FleetState),
     `out` (FleetStepOut, leaves [E, F, ...]) and — with spec.metrics
-    enabled — `metrics` (FleetMetrics dict, leaves [E, ...]); those
-    three are dropped by `to_json`/`from_json`."""
+    enabled — `metrics` (FleetMetrics dict, leaves [E, ...]); those,
+    plus the `learned` checkpoint handle of distillation runs, are
+    dropped by `to_json`/`from_json`."""
     spec: FleetRunSpec
     n_cameras: int
     n_steps: int
@@ -342,9 +359,32 @@ class FleetResult:
     frames_sent: tuple          # [E] frames shipped fleet-wide
     mean_shape: float           # mean explored-shape size
     timings: dict               # build_s, compile_s, steady_s, episode_s
+    # spec.distill runs only: [E] fleet-mean in-scan distill loss over
+    # the cameras that updated that step (-1.0 = off-cadence/idle step)
+    distill_loss: tuple | None = None
     state: FleetState | None = None
     out: FleetStepOut | None = None
     metrics: dict | None = None
+    # spec.distill runs only: (provider, final scan carry) — the learned
+    # per-camera params live in the carry; device-side, not serialized
+    learned: Any = None
+
+    def learned_params(self, camera: int | None = 0):
+        """Full detector params with camera `camera`'s learned subtree
+        merged in (None keeps the leading fleet axis on trained leaves).
+        Distillation runs only."""
+        if self.learned is None:
+            raise ValueError(
+                "no learned params: run with FleetRunSpec(distill=...)")
+        provider, carry = self.learned
+        return provider.learned_params(carry, camera=camera)
+
+    def save_learned_params(self, path: str, camera: int = 0) -> str:
+        """Checkpoint one camera's distilled detector as a
+        `save_detector_params` .npz (loadable via `det_params="..."`)."""
+        from repro.fleet.runner import save_detector_params
+
+        return save_detector_params(path, self.learned_params(camera))
 
     @property
     def camera_steps_per_s(self) -> float:
@@ -356,11 +396,13 @@ class FleetResult:
 
     def to_json(self, **dumps_kwargs) -> str:
         # drop the device pytrees BEFORE asdict: asdict deep-copies every
-        # leaf it recurses into, which for state/out/metrics would be a
-        # full device->host copy of all per-step outputs to discard it
+        # leaf it recurses into, which for state/out/metrics/learned
+        # would be a full device->host copy of all per-step outputs (and
+        # model params) just to discard it
         d = dataclasses.asdict(
-            dataclasses.replace(self, state=None, out=None, metrics=None))
-        d.pop("state"), d.pop("out"), d.pop("metrics")
+            dataclasses.replace(self, state=None, out=None, metrics=None,
+                                learned=None))
+        d.pop("state"), d.pop("out"), d.pop("metrics"), d.pop("learned")
         d["spec"] = json.loads(self.spec.to_json())
         return json.dumps(d, default=_jsonable, **dumps_kwargs)
 
@@ -371,6 +413,8 @@ class FleetResult:
         d["acc_per_step"] = tuple(d["acc_per_step"])
         d["chosen"] = tuple(tuple(c) for c in d["chosen"])
         d["frames_sent"] = tuple(d["frames_sent"])
+        if d.get("distill_loss") is not None:
+            d["distill_loss"] = tuple(d["distill_loss"])
         return cls(**d)
 
 
@@ -413,7 +457,22 @@ def run_fleet(spec: FleetRunSpec, *, mesh=None) -> FleetResult:
         res = jax.block_until_ready(compiled(prep.statics, state, provider))
     steady_s = time.perf_counter() - t0
 
-    if mspec is not None:
+    learns = getattr(provider, "learns", False)
+    distill_loss = learned = None
+    if learns:
+        state, (out, ex), fc = res
+        fleet_metrics = ex["metrics"] if mspec is not None else None
+        # fleet-mean loss over the cameras that actually updated each
+        # step; keep the -1.0 sentinel for off-cadence/idle steps
+        loss = np.asarray(ex["learn"]["loss"], np.float32)      # [E, F]
+        upd = loss >= 0.0
+        nupd = upd.sum(axis=1)
+        distill_loss = tuple(
+            float(v) for v in np.where(
+                nupd > 0,
+                (loss * upd).sum(axis=1) / np.maximum(nupd, 1), -1.0))
+        learned = (provider, fc)
+    elif mspec is not None:
         state, (out, ex) = res
         fleet_metrics = ex["metrics"]
     else:
@@ -434,4 +493,5 @@ def run_fleet(spec: FleetRunSpec, *, mesh=None) -> FleetResult:
         timings={"build_s": prep.build_s, "compile_s": compile_s,
                  "steady_s": steady_s,
                  "episode_s": compile_s + steady_s},
-        state=state, out=out, metrics=fleet_metrics)
+        distill_loss=distill_loss,
+        state=state, out=out, metrics=fleet_metrics, learned=learned)

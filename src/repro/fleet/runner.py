@@ -247,6 +247,16 @@ class DetectorProvider:
         to pixels and scored through a serial per-chunk lax.map. Kept
         exhaustive-only, as the bit-exact anchor the fast path's parity
         tests pin against.
+
+    With `distill` set (a repro.learn.DistillSpec — static, so it keys
+    the jit cache like every other config), the provider LEARNS in-scan:
+    a LearnState (per-camera trainable params + optimizer state + pair
+    ring) joins the carry, the fused forward routes through per-camera
+    heads, and after each fleet_step the `learn` hook harvests teacher
+    pairs from the SENT crops and takes a cadence-gated optimizer step —
+    entirely inside the episode scan. distill=None compiles the exact
+    frozen-params program (decisions bit-identical, pinned by
+    tests/test_learn.py).
     """
     scene: SceneProvider        # world + teachers (oracle feedback)
     det_cfg: object             # DetectorConfig (hashable, jit-static)
@@ -260,23 +270,47 @@ class DetectorProvider:
     fused: bool = True          # fast path vs reference chunk loop
     use_kernel: bool = False    # Pallas crop_patchify vs jnp reference
     kernel_interpret: bool = True
+    distill: object = None      # repro.learn.DistillSpec | None (static)
 
     @property
     def n_steps(self) -> int:
         return self.scene.n_steps
 
+    @property
+    def learns(self) -> bool:
+        """True when the episode should call the `learn` hook — kept off
+        the ObservationProvider protocol (runtime_checkable would demand
+        it of every provider); the episode probes via getattr."""
+        return self.distill is not None
+
+    def _effective_k(self) -> int:
+        c = self.scene.windows.shape[0]
+        k = self.shortlist_k
+        return k if 0 < k < c else c
+
     # -- ObservationProvider hooks --------------------------------------
     def init_carry(self, state: FleetState):
-        # detector params ride in the carry (unchanged for now; an
-        # in-scan distillation update slots in there)
-        return (self.scene.state0, self.det_params)
+        # detector params ride in the carry; with distill on, the
+        # LearnState (per-camera trainable heads/params + opt + ring)
+        # rides alongside and is what the optimizer step rewrites
+        if self.distill is None:
+            return (self.scene.state0, self.det_params)
+        from repro.learn.loop import init_learn
+
+        lc = init_learn(self.distill, self.det_cfg, self.det_params,
+                        state.step_idx.shape[0], self._effective_k())
+        return (self.scene.state0, self.det_params, lc)
 
     def scan_xs(self):
         return (self.scene.mbps, self.scene.rtt)
 
     def observe(self, cfg: FleetConfig, wl: WorkloadSpec, carry,
                 state: FleetState, xs):
-        sc, dp = carry
+        learn_on = self.distill is not None
+        if learn_on:
+            sc, dp, lc = carry
+        else:
+            sc, dp = carry
         mbps_t, rtt_t = xs
         p = self.scene
         kinds = jnp.asarray(kind_mask(p.spec))
@@ -295,7 +329,10 @@ class DetectorProvider:
                               cam_salt=state.rng[:, 0])
         noise_img = render_noise(state.rng, frame, res) * self.noise
 
-        if self.fused:
+        if learn_on:
+            dets, lc = self._score_learn(cfg, state, sc, dp, lc, kinds,
+                                         noise_img)
+        elif self.fused:
             dets = self._score_fused(cfg, state, sc, dp, kinds, noise_img)
         else:
             dets = self._score_chunked(sc, dp, kinds, noise_img, p, res)
@@ -306,7 +343,7 @@ class DetectorProvider:
                        centroid=do.centroid, spread=do.spread,
                        extent=do.extent, nbox=do.nbox,
                        acc_true=do.acc_true, mbps=mbps_t, rtt=rtt_t)
-        return (sc, dp), obs
+        return ((sc, dp, lc) if learn_on else (sc, dp)), obs
 
     def _score_fused(self, cfg, state, sc, dp, kinds, noise_img):
         """Shortlist -> fused crop->token kernel -> one [F*K] forward,
@@ -368,6 +405,116 @@ class DetectorProvider:
             lambda x: jnp.moveaxis(x, 0, 1).reshape(
                 (x.shape[1], c) + x.shape[3:]), dets)
 
+    def _score_learn(self, cfg, state, sc, dp, lc, kinds, noise_img):
+        """The fused fast path routed through the LEARNED per-camera
+        params, staging the student payload for the pair harvest.
+
+        Head-only mode: the shared frozen backbone+neck runs once over
+        the flattened [F*K] shortlist (identical compute to the frozen
+        path), per-camera head convs finish the forward, and the
+        post-neck features are staged — so distillation training re-runs
+        ZERO backbone compute. Full-param mode: the whole per-camera
+        network scores its own camera's crops (vmap over the fleet) and
+        the patch tokens are staged instead."""
+        from repro.kernels.crop_patchify.ops import crop_patchify
+        from repro.models.detector import (
+            detections_from_feats,
+            detector_forward_tokens,
+            detector_neck_feats_tokens,
+        )
+
+        p = self.scene
+        c = p.windows.shape[0]
+        k = self._effective_k()
+        if k < c:
+            widx = shortlist_windows(cfg, state, self.nbr8, k)
+            wins = p.windows[widx]                          # [F, K, 4]
+        else:
+            wins = p.windows                                # shared [C, 4]
+        tokens = crop_patchify(
+            sc.pos, sc.size, kinds, sc.oid, wins,
+            dp["backbone"]["vit"]["patch_embed"],
+            patch=self.det_cfg.patch, res=self.det_cfg.img_res,
+            min_visible=p.spec.min_visible, noise=noise_img,
+            dtype=self.det_cfg.dtype,
+            block_k=_auto_chunk(k, self.chunk),
+            use_kernel=self.use_kernel,
+            interpret=self.kernel_interpret)                # [F, K, gg, D]
+        f = tokens.shape[0]
+        if k == c:
+            widx = jnp.broadcast_to(
+                jnp.arange(c, dtype=jnp.int32)[None], (f, c))
+
+        if self.distill.head_only:
+            feats = detector_neck_feats_tokens(
+                dp, self.det_cfg,
+                tokens.reshape((f * k,) + tokens.shape[2:]))
+            fe = feats.reshape((f, k) + feats.shape[1:])    # [F,K,g,g,Fd]
+            dets = jax.vmap(
+                lambda heads, x: detections_from_feats(
+                    self.det_cfg, heads, x))(lc.params, fe)
+            payload = fe
+        else:
+            dets = jax.vmap(
+                lambda par, x: detector_forward_tokens(
+                    par, self.det_cfg, x))(lc.params, tokens)
+            payload = tokens
+        if k < c:
+            arange_f = jnp.arange(f)[:, None]
+            dets = jax.tree.map(
+                lambda x: jnp.zeros((f, c) + x.shape[2:], x.dtype)
+                .at[arange_f, widx].set(x), dets)
+        lc = lc._replace(staged=payload.astype(lc.staged.dtype),
+                         staged_widx=widx.astype(jnp.int32))
+        return dets, lc
+
+    def learn(self, cfg: FleetConfig, wl: WorkloadSpec, carry,
+              state: FleetState, out):
+        """Post-step learning hook (called by _episode when `learns`):
+        harvest teacher pairs from the crops the budget SENT, then take
+        the cadence-gated optimizer step. `state` is the post-step
+        controller state (step_idx already incremented — the observation
+        frame is recovered as (step_idx - 1) * stride); `out` this
+        step's FleetStepOut. Returns (carry', aux) with aux {"loss": [F]
+        (-1.0 for skipped/idle cameras), "lr": [F]} — emitted into the
+        scan outputs. Every stage is row-wise per camera, preserving
+        fleet-size/shard independence."""
+        from repro.learn.loop import distill_step
+        from repro.learn.pairs import (
+            harvest_into_buffer,
+            select_sent_windows,
+            teacher_window_targets,
+        )
+
+        sc, dp, lc = carry
+        p = self.scene
+        sel_widx, sel_ok = select_sent_windows(
+            out, len(cfg.zoom_levels), self.distill.harvest)
+        boxes, classes, bvalid = teacher_window_targets(
+            p.spec, p.teach, p.params, sc,
+            (state.step_idx - 1) * p.stride, p.windows[sel_widx],
+            self.det_cfg.max_boxes, state.rng[:, 0])
+        lc = lc._replace(buf=harvest_into_buffer(
+            lc.buf, lc.staged, lc.staged_widx, sel_widx, sel_ok,
+            boxes, classes, bvalid))
+        lc, aux = distill_step(self.distill, self.det_cfg, lc,
+                               state.step_idx)
+        return (sc, dp, lc), aux
+
+    def learned_params(self, carry, camera=None):
+        """Full detector params from a learning episode's final carry —
+        per-camera trained subtree merged with the shared frozen rest.
+        camera=None keeps the fleet axis on trained leaves; an int
+        selects one camera's checkpoint (ready for
+        `save_detector_params`)."""
+        from repro.learn.loop import merged_params
+
+        if self.distill is None:
+            raise ValueError("learned_params needs a distill-enabled "
+                             "provider (distill=None runs frozen)")
+        sc, dp, lc = carry
+        return merged_params(self.distill, dp, lc.params, camera)
+
     def shard(self, mesh):
         # scene state/params shard with the fleet; detector params are
         # fleet-shared and replicate (as is the nbr8 grid geometry)
@@ -386,7 +533,7 @@ jax.tree_util.register_dataclass(
     data_fields=["scene", "det_params", "thresh", "geo_thresh", "noise",
                  "nbr8"],
     meta_fields=["det_cfg", "chunk", "shortlist_k", "fused", "use_kernel",
-                 "kernel_interpret"])
+                 "kernel_interpret", "distill"])
 
 
 def build_episode_tables(video, workload: Workload, tables: dict,
@@ -630,7 +777,8 @@ def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
                            shortlist_k: int | None = None,
                            fused: bool = True,
                            use_kernel: bool = False,
-                           kernel_interpret: bool = True, **scene_kwargs
+                           kernel_interpret: bool = True,
+                           distill=None, **scene_kwargs
                            ) -> tuple[DetectorProvider, FleetState]:
     """Scene provider + the approximation detector scored in-step.
 
@@ -656,6 +804,13 @@ def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
     `chunk` bounds the reference path's render+infer slab (must divide
     N*Z, default one cell-row of zooms at a time — `_auto_chunk`).
     `scene_kwargs` are make_scene_provider's heterogeneity knobs.
+
+    `distill` turns on in-scan continual distillation (paper §3.4): a
+    repro.learn.DistillSpec, a dict of its fields, or True for the
+    default spec — the camera's per-query heads then train inside the
+    episode scan on teacher grades of the crops the budget sent. Fused
+    pipeline only (the chunked reference stays the frozen bit-exact
+    anchor); None keeps today's frozen-params program exactly.
     """
     from repro.configs import get_smoke_config
     from repro.models.detector import detector_init
@@ -704,6 +859,21 @@ def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
             "detections, which only read as empty under a positive "
             f"threshold (got thresh={thresh!r}, "
             f"geo_thresh={geo_thresh!r})")
+    from repro.learn.spec import normalize_distill
+
+    distill = normalize_distill(distill)
+    if distill is not None:
+        if not fused:
+            raise ValueError(
+                "in-scan distillation rides the fused fast path (the "
+                "student payload is staged from the fused forward); the "
+                "chunked reference (fused=False) stays the frozen "
+                "bit-exact anchor — drop distill or fused=False")
+        if distill.harvest > grid.n_cells:
+            raise ValueError(
+                f"distill.harvest={distill.harvest} exceeds the "
+                f"{grid.n_cells} grid cells — no step can send that "
+                f"many distinct orientations")
     provider = DetectorProvider(
         scene=scene, det_cfg=det_cfg, det_params=det_params,
         thresh=jnp.broadcast_to(
@@ -712,7 +882,8 @@ def make_detector_provider(grid, workload: Workload, cfg: FleetConfig, *,
         noise=jnp.asarray(noise, jnp.float32),
         nbr8=fleet_statics(grid).neighbor8,
         chunk=chunk, shortlist_k=shortlist_k, fused=fused,
-        use_kernel=use_kernel, kernel_interpret=kernel_interpret)
+        use_kernel=use_kernel, kernel_interpret=kernel_interpret,
+        distill=distill)
     return provider, state
 
 
@@ -741,17 +912,28 @@ def _episode(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
     function compiles to the exact metrics-free program, so decisions
     are bit-identical either way (pinned by tests/test_obs.py).
 
-    With either extra enabled, ys becomes (FleetStepOut, extras dict
-    keyed "obs"/"metrics"); bare FleetStepOut otherwise.
+    Learning providers (getattr(provider, "learns", False) — the
+    DetectorProvider with a DistillSpec) additionally get their `learn`
+    hook called after every fleet_step, the per-step learn aux joins the
+    extras dict under "learn" (and, with metrics on, as
+    distill_loss/distill_lr in the FleetMetrics), and the FINAL provider
+    carry is returned as a third element — the learned params live
+    there. distill off compiles the exact pre-learning program.
+
+    With any extra enabled, ys becomes (FleetStepOut, extras dict keyed
+    "obs"/"metrics"/"learn"); bare FleetStepOut otherwise.
     """
     if metrics is not None and not metrics.enabled:
         metrics = None
+    learns = getattr(provider, "learns", False)
 
     def body(carry, xs):
         st, pc = carry
         pc, obs = provider.observe(cfg, wl, pc, st, xs)
         st2, out = fleet_step(cfg, wl, statics, st, obs)
-        if collect_obs or metrics is not None:
+        if learns:
+            pc, laux = provider.learn(cfg, wl, pc, st2, out)
+        if collect_obs or metrics is not None or learns:
             ex = {}
             if collect_obs:
                 ex["obs"] = {f: getattr(obs, f)[0] for f in _TABLE_FIELDS}
@@ -760,11 +942,21 @@ def _episode(cfg: FleetConfig, wl: WorkloadSpec, statics: FleetStatics,
 
                 ex["metrics"] = step_metrics(metrics, cfg, provider,
                                              st, st2, obs, out)
+            if learns:
+                ex["learn"] = laux
+                if metrics is not None:
+                    # distill keys join the emitted FleetMetrics only on
+                    # learning runs — MetricsSpec.keys() (and the
+                    # metrics-off parity pin) stay distill-agnostic
+                    ex["metrics"]["distill_loss"] = laux["loss"]
+                    ex["metrics"]["distill_lr"] = laux["lr"]
             return (st2, pc), (out, ex)
         return (st2, pc), out
 
-    (state, _), ys = jax.lax.scan(
+    (state, pc_final), ys = jax.lax.scan(
         body, (state, provider.init_carry(state)), provider.scan_xs())
+    if learns:
+        return state, ys, pc_final
     return state, ys
 
 
@@ -812,6 +1004,13 @@ def run_fleet_episode(cfg: FleetConfig, wl: WorkloadSpec,
     leaves [E, ...]). With it None/disabled the compiled program is the
     exact metrics-free one and the return stays a 2-tuple.
 
+    A LEARNING provider (DetectorProvider with distill set) appends two
+    more elements: (..., extras, final_carry) where extras is the
+    per-step dict {"learn": {...}} (+ "metrics" when enabled — also
+    reachable positionally as the 3-tuple's metrics element) and
+    final_carry holds the learned params
+    (provider.learned_params(final_carry)).
+
     Prefer `repro.fleet.api.run_fleet(spec)` unless you are composing
     providers/state yourself (parity tests and benchmarks do).
     """
@@ -820,6 +1019,13 @@ def run_fleet_episode(cfg: FleetConfig, wl: WorkloadSpec,
         provider = provider.shard(mesh)
     if metrics is not None and not metrics.enabled:
         metrics = None
+    learns = getattr(provider, "learns", False)
+    if learns:
+        state, (out, ex), fc = _episode(cfg, wl, statics, state, provider,
+                                        metrics=metrics)
+        if metrics is None:
+            return state, out, ex, fc
+        return state, out, ex["metrics"], ex, fc
     if metrics is None:
         return _episode(cfg, wl, statics, state, provider)
     state, (out, ex) = _episode(cfg, wl, statics, state, provider,

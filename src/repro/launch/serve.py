@@ -20,9 +20,15 @@ per-camera health / run_end) to a file or stdout, with the in-scan
 FleetMetrics enabled on the run so events carry EWMA labels, shortlist
 hit-rates, and chosen-rank medians.
 
+`--distill` (detector fleets) turns on in-scan continual distillation
+(repro.learn): each camera's approximation heads train against the scene
+teachers inside the episode scan.
+
   PYTHONPATH=src python -m repro.launch.serve --fps 5 --duration 20
   PYTHONPATH=src python -m repro.launch.serve --fleet 4 --provider scene
   PYTHONPATH=src python -m repro.launch.serve --fleet 4 --telemetry -
+  PYTHONPATH=src python -m repro.launch.serve --fleet 2 \
+      --provider detector --shortlist-k 18 --distill
 """
 from __future__ import annotations
 
@@ -51,12 +57,15 @@ PROVIDERS = ("tables", "scene", "detector")
 
 
 def _fleet_spec(provider: str, n: int, *, n_steps, seed, mbps, rtt_ms,
-                grid, workload, budget, substrate, shortlist_k=None):
+                grid, workload, budget, substrate, shortlist_k=None,
+                distill=None):
     """The FleetRunSpec serve runs for `--fleet n --provider name` —
     scene/detector fleets get per-camera heterogeneity (world seeds,
     densities, speeds, mobile network traces); the tables fleet reuses
     the already-built host substrate. `shortlist_k` (detector provider)
-    caps the candidate windows scored per camera-step."""
+    caps the candidate windows scored per camera-step; `distill`
+    (detector provider) turns on in-scan continual distillation
+    (repro.learn) of the per-camera approximation heads."""
     from repro.fleet import FleetRunSpec
 
     if provider == "tables":
@@ -77,6 +86,7 @@ def _fleet_spec(provider: str, n: int, *, n_steps, seed, mbps, rtt_ms,
         provider, n_cameras=n, n_steps=n_steps, seed=seed, grid=grid,
         workload=workload, budget=budget,
         shortlist_k=shortlist_k if provider == "detector" else None,
+        distill=distill if provider == "detector" else None,
         **kwargs)
 
 
@@ -85,7 +95,7 @@ def serve(fps: float, duration: float, *, seed: int = 3,
           rotation_speed: float = 400.0, pipelined: bool = False,
           fleet: int = 0, provider: str = "tables",
           fleet_scene: int = 0, fleet_detector: int = 0,
-          shortlist_k: int | None = None,
+          shortlist_k: int | None = None, distill: bool = False,
           telemetry: str | None = None,
           grid: OrientationGrid = DEFAULT_GRID,
           workload: Workload = DEFAULT_WORKLOAD):
@@ -114,6 +124,12 @@ def serve(fps: float, duration: float, *, seed: int = 3,
             "(--fleet N --provider detector); no other provider scores "
             "a per-window model, and dropping the flag silently would "
             "make a shortlist sweep meaningless")
+    if distill and not any(p == "detector" for _, p in runs):
+        raise SystemExit(
+            "--distill only applies to a detector fleet "
+            "(--fleet N --provider detector); no other provider carries "
+            "a per-camera model to train, and dropping the flag "
+            "silently would report frozen results as a learning run")
 
     t0 = time.time()
     video = build_video(grid, SceneConfig(fps=15, seed=seed), duration)
@@ -136,7 +152,8 @@ def serve(fps: float, duration: float, *, seed: int = 3,
                            rtt_ms=rtt_ms, grid=grid, workload=workload,
                            budget=budget,
                            substrate=(video, tables, acc, trace),
-                           shortlist_k=shortlist_k)
+                           shortlist_k=shortlist_k,
+                           distill=distill if name == "detector" else None)
         if telemetry is not None:
             # telemetry events enrich from the in-scan FleetMetrics
             spec = dataclasses.replace(spec, metrics=True)
@@ -147,6 +164,11 @@ def serve(fps: float, duration: float, *, seed: int = 3,
               f"sent/step={sum(r.frames_sent)/(r.n_steps*n):.1f}, "
               f"{r.n_steps} steps in {wall:.2f}s end-to-end incl. jit "
               f"compile ({r.camera_steps_per_s:.0f} steady camera-steps/s)")
+        if r.distill_loss is not None:
+            upd = [v for v in r.distill_loss if v >= 0]
+            print(f"  distill: {len(upd)} update steps, loss "
+                  f"{upd[0]:.4f} -> {upd[-1]:.4f}" if upd else
+                  "  distill: no update steps (ring never filled)")
         if telemetry is not None:
             n_ev = write_events(episode_events(r), telemetry)
             if telemetry != "-":
@@ -180,6 +202,11 @@ def main():
                     help="detector provider: candidate windows rendered"
                          " + scored per camera-step (multiple of the "
                          "zoom count; default all = exhaustive)")
+    ap.add_argument("--distill", action="store_true",
+                    help="detector provider: continually distill each "
+                         "camera's approximation heads from the scene "
+                         "teachers inside the episode scan "
+                         "(repro.learn, paper §3.4 defaults)")
     ap.add_argument("--telemetry", type=str, default=None,
                     metavar="PATH|-",
                     help="stream each fleet run as JSONL telemetry "
@@ -198,7 +225,8 @@ def main():
           pipelined=args.pipelined, fleet=args.fleet,
           provider=args.provider, fleet_scene=args.fleet_scene,
           fleet_detector=args.fleet_detector,
-          shortlist_k=args.shortlist_k, telemetry=args.telemetry)
+          shortlist_k=args.shortlist_k, distill=args.distill,
+          telemetry=args.telemetry)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,47 @@
+"""In-scan continual distillation (paper §3.4) — the scan carry learns.
+
+MadEye's second pillar: approximation models are continually distilled
+from the registered queries' teachers "with only camera resources". This
+package closes that loop *inside* the jit'd fleet episode:
+
+  spec.py   DistillSpec — declarative, JSON-round-trippable config hung
+            off FleetRunSpec.distill (optimizer, lr schedule, head-only
+            vs full-param, cadence, ring depth); None compiles the exact
+            pre-learning program
+  pairs.py  training-pair harvesting from the crops the budget actually
+            SENT: teacher grades of the chosen/sent windows, student
+            payload reused from the existing [F*K] fused forward —
+            training cost scales with shortlist_k, not N*Z
+  loss.py   the distill objective, reduced to models/detector
+            .detector_loss_from_outputs (one loss definition repo-wide)
+  loop.py   LearnState riding the scan carry; the cadence-gated
+            per-camera optimizer step (train/optim) with per-camera
+            clipping and idle-camera no-ops, plus the `finetune_update`
+            that core/continual.finetune_step now delegates to
+
+Entry point: `FleetRunSpec(provider="detector", distill=True)` — see
+fleet/api.py. The learning curve is read off the in-scan `chosen_rank`
+metric (obs/metrics.py) and benchmarked by benchmarks/bench_rank_quality
+.fleet_learning_curve.
+"""
+from repro.learn.loop import (
+    LearnState,
+    distill_step,
+    distill_update,
+    finetune_update,
+    init_finetune_state,
+    init_learn,
+    lr_at,
+    merged_params,
+    optimizer_apply,
+    trainable_mask,
+)
+from repro.learn.loss import distill_full_loss, distill_head_loss
+from repro.learn.pairs import (
+    PairBuffer,
+    harvest_into_buffer,
+    init_pair_buffer,
+    select_sent_windows,
+    teacher_window_targets,
+)
+from repro.learn.spec import DistillSpec, normalize_distill

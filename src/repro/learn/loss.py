@@ -1,0 +1,54 @@
+"""The distillation objective: pair buffer -> per-camera scalar loss.
+
+One loss definition for the whole repo: both heads reduce to
+`models/detector.detector_loss_from_outputs` — the exact math
+`detector_loss` (and through it the host-side `core/continual
+.finetune_step`) trains with — applied to the static-shape teacher
+targets of `core/distill.DistillTargets` layout (boxes cxcywh, classes,
+valid), weighted by the ring's slot-fill mask so empty buffer slots
+contribute nothing.
+
+Two payload modes, matching DistillSpec.head_only:
+
+  * `distill_head_loss` — payload is staged post-neck features; only the
+    per-camera head convs run forward+backward (the paper's "final 3
+    prediction layers", and how the <30% in-scan overhead gate is met);
+  * `distill_full_loss` — payload is staged patch tokens; the whole
+    per-camera network (minus the shared patch embedding that produced
+    the tokens) runs forward+backward.
+
+Both take single-camera tensors and are vmapped over the fleet axis by
+learn/loop.py, which keeps every camera's gradient independent.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.detector import (
+    detector_loss_from_outputs,
+    detector_loss_tokens,
+    head_outputs,
+)
+
+
+def distill_head_loss(heads, feats: jnp.ndarray, boxes: jnp.ndarray,
+                      classes: jnp.ndarray, valid: jnp.ndarray,
+                      weight: jnp.ndarray) -> jnp.ndarray:
+    """Head-only objective for ONE camera's ring.
+
+    heads: the camera's trainable head params; feats [B, g, g, Fd]
+    staged post-neck features; boxes/classes/valid the teacher targets
+    ([B, mb, ...]); weight [B] slot-fill weights. Returns a scalar.
+    """
+    cls_logits, box_raw, obj_logits = head_outputs(heads, feats)
+    return detector_loss_from_outputs(cls_logits, box_raw, obj_logits,
+                                      boxes, classes, valid, weight=weight)
+
+
+def distill_full_loss(params, cfg, tokens: jnp.ndarray, boxes: jnp.ndarray,
+                      classes: jnp.ndarray, valid: jnp.ndarray,
+                      weight: jnp.ndarray) -> jnp.ndarray:
+    """Full-param objective for ONE camera's ring: staged patch tokens
+    [B, P, D] re-run through the camera's trainable backbone + heads."""
+    return detector_loss_tokens(params, cfg, tokens, boxes, classes, valid,
+                                weight=weight, freeze_backbone=False)

@@ -1,0 +1,203 @@
+"""Training-pair harvesting: sent crops -> per-camera distillation pairs.
+
+The paper's constraint (§3.4) is that distillation runs "with only
+camera resources": the teacher only ever grades frames the budget
+actually shipped. This module enforces that shape exactly —
+
+  * `select_sent_windows` picks up to `harvest` of this step's SENT
+    windows (the chosen orientation first, then descending predicted
+    accuracy), so training pairs only come from crops the backend saw;
+  * `teacher_window_targets` produces the teacher's detections for those
+    windows as static-shape DistillTargets-style tensors, mirroring the
+    kernels/cell_rasterize geometry + scene_jax.observe teacher-draw rule
+    bit-for-bit (clip -> visibility -> apparent-size ramp -> hashed
+    flicker draw), in window-normalized cxcywh;
+  * `PairBuffer` is the on-device per-camera ring the pairs land in; the
+    student payload (staged post-neck features or patch tokens) is
+    gathered from the SAME [F, K] fused forward the ranking used, so
+    harvesting costs zero extra renders or backbone passes and total
+    training cost scales with shortlist_k, not N*Z.
+
+Every function is row-wise over the fleet axis (no cross-camera
+reductions, no shared RNG), so harvesting is fleet-size/shard
+independent — tests/test_learn.py pins full-fleet vs per-row equality.
+The host-side orientation-balanced `core/continual.ReplayBuffer` remains
+as the legacy reference implementation of the paper's replay balancing;
+this ring is its in-scan counterpart.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.scene_jax.observe import _BASE_SALT, TeacherArrays, hash01
+from repro.scene_jax.scene import SceneFleetParams, SceneSpec, SceneState, \
+    kind_mask
+
+
+class PairBuffer(NamedTuple):
+    """Per-camera ring of distillation pairs (device pytree, rides the
+    scan carry). `x` is the student payload — post-neck features
+    [F, B, g, g, Fd] in head-only mode, patch tokens [F, B, P, D] in
+    full-param mode. `weight` is 1.0 for filled slots, 0.0 for empty —
+    the loss weighs by it, so idle slots contribute nothing."""
+    x: jnp.ndarray          # [F, B, ...] student payload
+    boxes: jnp.ndarray      # [F, B, mb, 4] teacher boxes (cxcywh, window)
+    classes: jnp.ndarray    # [F, B, mb] int32 teacher classes
+    valid: jnp.ndarray      # [F, B, mb] bool per-box validity
+    weight: jnp.ndarray     # [F, B] float32 slot fill weight
+    ptr: jnp.ndarray        # [F] int32 next write position
+
+
+def init_pair_buffer(n_cameras: int, buffer: int, payload_shape: tuple,
+                     max_boxes: int, dtype=jnp.float32) -> PairBuffer:
+    f, b = n_cameras, buffer
+    return PairBuffer(
+        x=jnp.zeros((f, b) + tuple(payload_shape), dtype),
+        boxes=jnp.zeros((f, b, max_boxes, 4), jnp.float32),
+        classes=jnp.zeros((f, b, max_boxes), jnp.int32),
+        valid=jnp.zeros((f, b, max_boxes), bool),
+        weight=jnp.zeros((f, b), jnp.float32),
+        ptr=jnp.zeros((f,), jnp.int32))
+
+
+def select_sent_windows(out, n_zoom: int, harvest: int):
+    """FleetStepOut -> the flattened window ids (cell * Z + zoom) worth
+    harvesting this step.
+
+    Only SENT cells qualify (paper: the teacher grades shipped frames).
+    Priority: the chosen orientation first (it is always sent — rank 0
+    clears any k_send >= 1), then descending predicted accuracy;
+    lax.top_k's lower-index tie-break keeps the selection deterministic.
+    Returns (widx [F, H] int32, ok [F, H] bool) — ok=False rows are
+    padding when fewer than `harvest` cells were sent.
+    """
+    import jax
+
+    f, n = out.sent.shape
+    score = jnp.where(out.sent, out.pred_acc, -jnp.inf)
+    score = score.at[jnp.arange(f), out.chosen].add(
+        jnp.where(out.sent[jnp.arange(f), out.chosen], 10.0, 0.0))
+    vals, cells = jax.lax.top_k(score, harvest)             # [F, H]
+    ok = jnp.isfinite(vals)
+    safe_cells = jnp.where(ok, cells, 0)
+    zooms = jnp.take_along_axis(out.zooms, safe_cells, axis=1)
+    return (safe_cells * n_zoom + zooms).astype(jnp.int32), ok
+
+
+def teacher_window_targets(spec: SceneSpec, teach: TeacherArrays,
+                           params: SceneFleetParams, sc: SceneState,
+                           t: jnp.ndarray, sel_windows: jnp.ndarray,
+                           max_boxes: int,
+                           cam_salt: jnp.ndarray):
+    """Teacher detections for the harvested windows, as static targets.
+
+    sel_windows [F, H, 4] (x0, y0, fw, fh) scene-degree FOVs; t [F] the
+    flicker/miss clock frame (the SAME frame the observation pass used);
+    cam_salt [F] the per-camera noise salt (state.rng[:, 0]).
+
+    Mirrors the oracle pass exactly: an object is a teacher detection in
+    a window when it is >= min_visible there and its hashed flicker draw
+    clears the apparent-size response ramp for ANY workload pair of its
+    class — the identical rule cell_rasterize counted for acc_true, so
+    the student trains on the teacher the controller is graded against.
+    Boxes come back window-normalized cxcywh (the clipped extent), the
+    `max_boxes` largest first. Returns (boxes [F, H, mb, 4],
+    classes [F, H, mb] int32, valid [F, H, mb] bool).
+    """
+    import jax
+
+    kinds = jnp.asarray(kind_mask(spec))                   # [M]
+    cls_match = (teach.cls[:, None] == kinds[None, :])     # [P, M]
+
+    # teacher draw (scene_jax.observe rule: base/bucket flicker mix of
+    # the FNV hash, normalized by the plateau; disabled slots never fire)
+    cam = cam_salt[:, None, None]                          # [F, 1, 1]
+    oid = sc.oid[:, None, :]                               # [F, 1, M]
+    salt = teach.salt[None, :, None]                       # [1, P, 1]
+    bucket = (t // spec.flicker_bucket)[:, None, None]     # [F, 1, 1]
+    draw = ((1.0 - teach.flicker[None, :, None])
+            * hash01(oid, salt, cam, jnp.uint32(_BASE_SALT))
+            + teach.flicker[None, :, None] * hash01(oid, salt, cam, bucket))
+    draw = draw / jnp.maximum(teach.pmax[None, :, None], 1e-6)
+    live = params.enabled[:, None, :] & cls_match[None]    # [F, P, M]
+    draw_t = jnp.where(live, draw, 2.0)
+
+    # window clipping + visibility (kernels/cell_rasterize geometry)
+    x0 = sel_windows[..., 0][:, None, :]                   # [F, 1, H]
+    y0 = sel_windows[..., 1][:, None, :]
+    fw = sel_windows[..., 2][:, None, :]
+    fh = sel_windows[..., 3][:, None, :]
+    ox, oy = sc.pos[..., 0], sc.pos[..., 1]                # [F, M]
+    ow, oh = sc.size[..., 0], sc.size[..., 1]
+    ix0 = jnp.maximum((ox - ow / 2)[..., None], x0)        # [F, M, H]
+    ix1 = jnp.minimum((ox + ow / 2)[..., None], x0 + fw)
+    iy0 = jnp.maximum((oy - oh / 2)[..., None], y0)
+    iy1 = jnp.minimum((oy + oh / 2)[..., None], y0 + fh)
+    iw = jnp.maximum(ix1 - ix0, 0.0)
+    ih = jnp.maximum(iy1 - iy0, 0.0)
+    vis = (iw * ih) / jnp.maximum((ow * oh)[..., None], 1e-9)
+    visible = vis >= spec.min_visible
+
+    nw, nh = iw / fw, ih / fh
+    apparent = jnp.maximum(nw, nh)
+    resp = jnp.clip(
+        (apparent[:, None] - teach.a0[None, :, None, None])
+        / jnp.maximum((teach.a1 - teach.a0)[None, :, None, None], 1e-6),
+        0.0, 1.0)                                          # [F, P, M, H]
+    det = (draw_t[..., None] < resp) & visible[:, None]
+    det_any = jnp.any(det, axis=1)                         # [F, M, H]
+
+    # window-normalized cxcywh of the clipped extent
+    bcx = ((ix0 + ix1) / 2 - x0) / fw
+    bcy = ((iy0 + iy1) / 2 - y0) / fh
+    boxes_all = jnp.stack([bcx, bcy, nw, nh], axis=-1)     # [F, M, H, 4]
+
+    a_norm = nw * nh
+    score = jnp.where(det_any, a_norm, -1.0)               # [F, M, H]
+    score = jnp.moveaxis(score, 1, 2)                      # [F, H, M]
+    vals, midx = jax.lax.top_k(score, max_boxes)           # [F, H, mb]
+    bvalid = vals > 0.0
+    f = sc.oid.shape[0]
+    af = jnp.arange(f)[:, None, None]
+    ah = jnp.arange(sel_windows.shape[1])[None, :, None]
+    boxes = jnp.moveaxis(boxes_all, 1, 2)[af, ah, midx]    # [F, H, mb, 4]
+    classes = jnp.broadcast_to(kinds[None, None, :],
+                               score.shape)[af, ah, midx].astype(jnp.int32)
+    return boxes, classes, bvalid
+
+
+def harvest_into_buffer(buf: PairBuffer, staged: jnp.ndarray,
+                        staged_widx: jnp.ndarray, sel_widx: jnp.ndarray,
+                        sel_ok: jnp.ndarray, boxes: jnp.ndarray,
+                        classes: jnp.ndarray, bvalid: jnp.ndarray
+                        ) -> PairBuffer:
+    """Ring-write this step's harvested pairs.
+
+    staged [F, K, ...] is the inference pass's student payload;
+    staged_widx [F, K] the window ids it covers. Selected windows that
+    are not in the staged set (can't happen when the selection comes
+    from sent == shortlisted cells, but the code does not rely on it)
+    and padding rows (sel_ok=False) write to the out-of-range slot and
+    are dropped (`mode="drop"`), so real entries are never clobbered by
+    invalid ones. Row-wise per camera: fleet-size/shard independent.
+    """
+    f, b = buf.weight.shape
+    eq = staged_widx[:, :, None] == sel_widx[:, None, :]   # [F, K, H]
+    pos = jnp.argmax(eq, axis=1)                           # [F, H]
+    found = jnp.any(eq, axis=1) & sel_ok
+    af = jnp.arange(f)[:, None]
+    payload = staged[af, pos]                              # [F, H, ...]
+
+    offs = (jnp.cumsum(found.astype(jnp.int32), axis=1)
+            - found.astype(jnp.int32))
+    slot = (buf.ptr[:, None] + offs) % b
+    wslot = jnp.where(found, slot, b)                      # b = dropped
+    return PairBuffer(
+        x=buf.x.at[af, wslot].set(payload, mode="drop"),
+        boxes=buf.boxes.at[af, wslot].set(boxes, mode="drop"),
+        classes=buf.classes.at[af, wslot].set(classes, mode="drop"),
+        valid=buf.valid.at[af, wslot].set(bvalid, mode="drop"),
+        weight=buf.weight.at[af, wslot].set(1.0, mode="drop"),
+        ptr=((buf.ptr + found.sum(axis=1)) % b).astype(jnp.int32))

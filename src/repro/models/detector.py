@@ -66,15 +66,30 @@ def detector_init(key, cfg: DetectorConfig) -> Params:
     }
 
 
+def neck_features(bb: Params, feats: jnp.ndarray) -> jnp.ndarray:
+    """backbone feature map [B, g, g, D] -> post-neck map [B, g, g, F].
+
+    The frozen end of the network: everything up to (and including) this
+    is masked out of fine-tuning, which is what lets the in-scan learner
+    (repro.learn) stage these features once from the inference forward
+    and train the heads on them without re-running the backbone."""
+    f = conv2d(bb["neck"]["lateral"], feats)
+    return jax.nn.gelu(conv2d(bb["neck"]["smooth"], f))     # [B, g, g, F]
+
+
+def head_outputs(heads: Params, f: jnp.ndarray):
+    """post-neck features [B, g, g, F] -> raw head outputs — the
+    per-query fine-tuned slice of the forward (paper: the final 3
+    prediction layers)."""
+    cls_logits = conv2d(heads["cls"], f)
+    box_raw = conv2d(heads["box"], f)
+    obj_logits = conv2d(heads["obj"], f)[..., 0]
+    return cls_logits, box_raw, obj_logits
+
+
 def _neck_and_heads(params: Params, bb: Params, feats: jnp.ndarray):
     """backbone feature map [B, g, g, D] -> raw head outputs."""
-    f = conv2d(bb["neck"]["lateral"], feats)
-    f = jax.nn.gelu(conv2d(bb["neck"]["smooth"], f))        # [B, g, g, F]
-
-    cls_logits = conv2d(params["heads"]["cls"], f)
-    box_raw = conv2d(params["heads"]["box"], f)
-    obj_logits = conv2d(params["heads"]["obj"], f)[..., 0]
-    return cls_logits, box_raw, obj_logits
+    return head_outputs(params["heads"], neck_features(bb, feats))
 
 
 def detector_raw(params: Params, cfg: DetectorConfig, images: jnp.ndarray, *,
@@ -104,6 +119,29 @@ def detector_raw_tokens(params: Params, cfg: DetectorConfig,
         bb = jax.lax.stop_gradient(bb)
     feats = vit.vit_features_tokens(bb["vit"], bcfg, tokens)
     return _neck_and_heads(params, bb, feats)
+
+
+def detector_neck_feats_tokens(params: Params, cfg: DetectorConfig,
+                               tokens: jnp.ndarray) -> jnp.ndarray:
+    """Patch tokens [B, P, D] -> post-neck feature map [B, g, g, F].
+
+    The frozen half of the fused fast path when the heads are trained
+    per camera (repro.learn): the shared backbone+neck run once over
+    the [F*K] shortlist, per-camera heads consume the result, and the
+    same features are staged as the training payload — head-only
+    distillation re-runs zero backbone compute."""
+    bcfg = _backbone_cfg(cfg)
+    bb = params["backbone"]
+    feats = vit.vit_features_tokens(bb["vit"], bcfg, tokens)
+    return neck_features(bb, feats)
+
+
+def detections_from_feats(cfg: DetectorConfig, heads: Params,
+                          feats: jnp.ndarray) -> Detections:
+    """Post-neck features [B, g, g, F] + head params -> Detections.
+    Completes `detector_neck_feats_tokens` with (possibly per-camera
+    fine-tuned) heads."""
+    return _decode_detections(cfg, *head_outputs(heads, feats))
 
 
 def decode_boxes(box_raw: jnp.ndarray) -> jnp.ndarray:
@@ -158,16 +196,20 @@ def _decode_detections(cfg: DetectorConfig, cls_logits, box_raw,
 # Training loss (distillation target = teacher boxes; see core/distill.py)
 # ---------------------------------------------------------------------------
 
-def detector_loss(params: Params, cfg: DetectorConfig, images: jnp.ndarray,
-                  gt_boxes: jnp.ndarray, gt_classes: jnp.ndarray,
-                  gt_valid: jnp.ndarray, *, freeze_backbone: bool = True):
-    """Anchor-free single-level loss.
+def detector_loss_from_outputs(cls_logits: jnp.ndarray, box_raw: jnp.ndarray,
+                               obj_logits: jnp.ndarray,
+                               gt_boxes: jnp.ndarray, gt_classes: jnp.ndarray,
+                               gt_valid: jnp.ndarray,
+                               weight: jnp.ndarray | None = None):
+    """The anchor-free single-level loss on raw head outputs.
 
-    gt_boxes [B,N,4] cxcywh; gt_classes [B,N] int; gt_valid [B,N] bool.
-    Each valid GT is assigned to the cell containing its center.
+    The ONE loss definition: `detector_loss` (full forward) and the
+    in-scan distillation objective (repro.learn.loss, staged post-neck
+    features) both reduce to this. `weight` [B] is an optional per-sample
+    weight — the pair-buffer path weighs empty ring slots 0 so idle
+    buffer rows contribute nothing; weight=None is the exact unweighted
+    math (bit-identical to the pre-refactor loss).
     """
-    cls_logits, box_raw, obj_logits = detector_raw(
-        params, cfg, images, freeze_backbone=freeze_backbone)
     B, g = cls_logits.shape[0], cls_logits.shape[1]
     K = cls_logits.shape[-1]
 
@@ -199,19 +241,56 @@ def detector_loss(params: Params, cfg: DetectorConfig, images: jnp.ndarray,
     p = jax.nn.sigmoid(obj_logits)
     bce = -(obj_t * jnp.log(p + 1e-8) + (1 - obj_t) * jnp.log(1 - p + 1e-8))
     focal_w = jnp.where(obj_t > 0, (1 - p) ** 2, p ** 2)
-    obj_loss = jnp.mean(focal_w * bce)
-
-    # class CE + box L1 on positive cells only
     pos = obj_t                                          # [B, g*g]
-    n_pos = jnp.maximum(jnp.sum(pos), 1.0)
     logp = jax.nn.log_softmax(cls_logits, axis=-1)
-    cls_loss = -jnp.sum(
-        pos * jnp.take_along_axis(logp, cls_t[..., None], axis=-1)[..., 0]
-    ) / n_pos
-    box_loss = jnp.sum(
-        pos[..., None] * jnp.abs(pred_boxes - box_t)) / n_pos
+    cls_nll = -jnp.take_along_axis(logp, cls_t[..., None], axis=-1)[..., 0]
+    box_l1 = jnp.abs(pred_boxes - box_t)
+
+    if weight is None:
+        obj_loss = jnp.mean(focal_w * bce)
+        n_pos = jnp.maximum(jnp.sum(pos), 1.0)
+        cls_loss = jnp.sum(pos * cls_nll) / n_pos
+        box_loss = jnp.sum(pos[..., None] * box_l1) / n_pos
+    else:
+        w = weight.astype(jnp.float32)[:, None]          # [B, 1]
+        obj_loss = (jnp.sum(w * focal_w * bce)
+                    / jnp.maximum(jnp.sum(w) * (g * g), 1.0))
+        wpos = w * pos
+        n_pos = jnp.maximum(jnp.sum(wpos), 1.0)
+        cls_loss = jnp.sum(wpos * cls_nll) / n_pos
+        box_loss = jnp.sum(wpos[..., None] * box_l1) / n_pos
 
     return obj_loss + cls_loss + box_loss
+
+
+def detector_loss(params: Params, cfg: DetectorConfig, images: jnp.ndarray,
+                  gt_boxes: jnp.ndarray, gt_classes: jnp.ndarray,
+                  gt_valid: jnp.ndarray, *, freeze_backbone: bool = True):
+    """Anchor-free single-level loss over a full image forward.
+
+    gt_boxes [B,N,4] cxcywh; gt_classes [B,N] int; gt_valid [B,N] bool.
+    Each valid GT is assigned to the cell containing its center.
+    """
+    cls_logits, box_raw, obj_logits = detector_raw(
+        params, cfg, images, freeze_backbone=freeze_backbone)
+    return detector_loss_from_outputs(cls_logits, box_raw, obj_logits,
+                                      gt_boxes, gt_classes, gt_valid)
+
+
+def detector_loss_tokens(params: Params, cfg: DetectorConfig,
+                         tokens: jnp.ndarray, gt_boxes: jnp.ndarray,
+                         gt_classes: jnp.ndarray, gt_valid: jnp.ndarray, *,
+                         weight: jnp.ndarray | None = None,
+                         freeze_backbone: bool = False):
+    """`detector_loss` starting from patch-embedding tokens [B, P, D] —
+    the full-param distillation objective (the staged training payload
+    is the crop_patchify token buffer, re-run through the trainable
+    backbone)."""
+    cls_logits, box_raw, obj_logits = detector_raw_tokens(
+        params, cfg, tokens, freeze_backbone=freeze_backbone)
+    return detector_loss_from_outputs(cls_logits, box_raw, obj_logits,
+                                      gt_boxes, gt_classes, gt_valid,
+                                      weight=weight)
 
 
 def head_params_mask(params: Params) -> Params:

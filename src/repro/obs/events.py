@@ -20,7 +20,9 @@ event; `validate_event` pins the required keys):
       "health": ["ok"|"idle"|"lagging", ...],
       # with FleetMetrics enabled on the run, additionally:
       "ewma_label": [...], "shortlist_hit_rate": [...],
-      "chosen_rank_median": [...]}}
+      "chosen_rank_median": [...],
+      # and on distillation runs (FleetRunSpec.distill, repro.learn):
+      "distill_loss": [...], "distill_lr": [...]}}
 
   {"event": "run_end", "schema": 1, "accuracy": float,
    "frames_sent_total": int, "timings": {...},
@@ -139,6 +141,20 @@ def episode_events(result, *, chunk: int = 16):
                 rank = np.asarray(metrics["chosen_rank"][s0:s1])
                 cameras["chosen_rank_median"] = [
                     median_valid_rank(rank[:, fi]) for fi in range(f)]
+            if "distill_loss" in metrics:
+                # learning runs (repro.learn) — per-camera mean loss
+                # over this chunk's actual updates (-1.0 = none)
+                loss = np.asarray(metrics["distill_loss"][s0:s1],
+                                  np.float32)
+                upd = loss >= 0.0
+                cameras["distill_loss"] = [
+                    round(float((loss[:, fi] * upd[:, fi]).sum()
+                                / max(upd[:, fi].sum(), 1))
+                          if upd[:, fi].any() else -1.0, 5)
+                    for fi in range(f)]
+                lr = np.asarray(metrics["distill_lr"][s1 - 1])
+                cameras["distill_lr"] = [
+                    round(float(x), 6) for x in lr]
         yield validate_event({
             "event": "steps", "schema": SCHEMA_VERSION,
             "step0": s0, "step1": s1,

@@ -176,4 +176,14 @@ def summarize_metrics(metrics: dict) -> dict:
             median_valid_rank(m["chosen_rank"][:, fi])
             for fi in range(m["chosen_rank"].shape[1])]
         out["score_mean"] = m["score_mean"].mean(0).tolist()
+    if "distill_loss" in m:
+        # learning runs only (repro.learn): mean loss per camera over
+        # the steps it actually updated (-1.0 marks off-cadence/idle)
+        loss = m["distill_loss"]
+        upd = loss >= 0.0
+        n = np.maximum(upd.sum(0), 1)
+        out["distill_loss_mean"] = np.where(
+            upd.any(0), (loss * upd).sum(0) / n, -1.0).tolist()
+        out["distill_update_steps"] = upd.sum(0).tolist()
+        out["distill_lr_final"] = m["distill_lr"][-1].tolist()
     return out

@@ -170,7 +170,8 @@ def run_fleet_scene_controller(grid, workload, budget, *, n_cameras: int,
 def run_fleet_detector_controller(grid, workload, budget, *,
                                   n_cameras: int, n_steps: int, mesh=None,
                                   seed: int = 0, det_cfg=None,
-                                  det_params=None, **scene_kwargs):
+                                  det_params=None, distill=None,
+                                  **scene_kwargs):
     """Fleet controller with the approximation model in the loop — a
     shim over `run_fleet` with the `detector` provider, the paper's full
     camera-side pipeline (§3.4): every candidate orientation is
@@ -183,9 +184,14 @@ def run_fleet_detector_controller(grid, workload, budget, *,
     det_cfg defaults to the madeye-approx smoke config (64 px crops);
     det_params are initialized from `seed` when not given — pass a
     distilled checkpoint (pytree or .npz path) for a trained camera.
-    `scene_kwargs` go to fleet.make_detector_provider (same
-    scene/network heterogeneity knobs as the scene controller). Returns
-    (final FleetState, FleetStepOut stacked over steps).
+    `distill` (True / DistillSpec / dict, see repro.learn) turns on
+    in-scan continual distillation: per-camera detector heads train
+    against the scene teachers inside the scan, and the episode return
+    grows the (extras, final carry) tail documented on
+    fleet.run_fleet_episode. `scene_kwargs` go to
+    fleet.make_detector_provider (same scene/network heterogeneity
+    knobs as the scene controller). Returns (final FleetState,
+    FleetStepOut stacked over steps) on frozen runs.
     """
     from repro.fleet import FleetRunSpec, prepare_fleet_run
 
@@ -193,7 +199,8 @@ def run_fleet_detector_controller(grid, workload, budget, *,
     spec = FleetRunSpec.from_objects(
         "detector", n_cameras=n_cameras, n_steps=n_steps, seed=seed,
         grid=grid, workload=workload, budget=budget,
-        det_cfg=det_cfg, det_params=det_params, **scene_kwargs)
+        det_cfg=det_cfg, det_params=det_params, distill=distill,
+        **scene_kwargs)
     with span("engine/fleet_controller", provider="detector"):
         return prepare_fleet_run(spec, mesh=mesh).episode()
 

@@ -61,6 +61,25 @@ def test_spec_json_roundtrip():
     assert spec4.provider_kwargs["scene_seeds"] == [0, 1, 2]
 
 
+def test_spec_distill_json_roundtrip():
+    """DistillSpec normalizes like metrics (True/False/dict) and
+    round-trips through spec JSON as a plain dict."""
+    from repro.learn import DistillSpec
+
+    assert FleetRunSpec(distill=None).distill is None
+    assert FleetRunSpec(distill=False).distill is None
+    assert FleetRunSpec(distill={"enabled": False}).distill is None
+    assert FleetRunSpec(distill=True).distill == DistillSpec()
+    spec = FleetRunSpec(provider="detector", distill={
+        "optimizer": "sgd", "lr": 0.05, "schedule": "cosine",
+        "every": 2, "buffer": 4})
+    assert spec.distill == DistillSpec(
+        optimizer="sgd", lr=0.05, schedule="cosine", every=2, buffer=4)
+    spec2 = FleetRunSpec.from_json(spec.to_json())
+    assert spec2 == spec and isinstance(spec2.distill, DistillSpec)
+    assert spec2.to_json() == spec.to_json()
+
+
 def test_spec_object_views():
     spec = FleetRunSpec(budget={"fps": 2.0})
     assert spec.grid_obj() == DEFAULT_GRID

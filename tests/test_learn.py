@@ -1,0 +1,349 @@
+"""In-scan continual distillation (repro.learn, paper §3.4).
+
+Pins the subsystem's two hard invariants plus its moving parts:
+
+  * distill OFF is invisible — a spec without `distill` makes
+    bit-identical decisions (chosen + pred_acc) to one with
+    distill=False/{"enabled": False} across all three providers, and
+    the detector provider's frozen episode never touches LearnState;
+  * learning is per-camera — pair harvesting and the optimizer step are
+    fleet-size independent (lane 7 learns the same whether it rides an
+    F=1 or F=2 fleet), head-only mode leaves every non-head param
+    bit-unchanged, and idle cameras (empty ring) are bit-exact no-ops;
+  * the pieces round-trip — DistillSpec JSON, learned-params .npz
+    checkpoints, and `serve --distill` end to end.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DetectorConfig
+from repro.fleet import FleetRunSpec, run_fleet
+from repro.learn import (
+    DistillSpec,
+    LearnState,
+    distill_update,
+    harvest_into_buffer,
+    init_learn,
+    init_pair_buffer,
+    normalize_distill,
+    select_sent_windows,
+)
+
+
+def _run(distill=None, *, n_cameras=2, n_steps=8, seeds=(3, 5), **kw):
+    kw.setdefault("shortlist_k", 9)
+    pk = kw.pop("provider_kwargs", {"scene_seeds": list(seeds)})
+    spec = FleetRunSpec(
+        provider="detector", n_cameras=n_cameras, n_steps=n_steps,
+        budget={"fps": 3.0}, seed=3, distill=distill,
+        provider_kwargs=pk, **kw)
+    return run_fleet(spec)
+
+
+# ---------------------------------------------------------------------------
+# DistillSpec: normalization, validation, JSON
+# ---------------------------------------------------------------------------
+
+def test_distill_spec_normalization():
+    assert normalize_distill(None) is None
+    assert normalize_distill(False) is None
+    assert normalize_distill(True) == DistillSpec()
+    assert normalize_distill({"enabled": False}) is None
+    assert normalize_distill({"lr": 0.01}) == DistillSpec(lr=0.01)
+    d = DistillSpec(every=2)
+    assert normalize_distill(d) is d
+
+
+def test_distill_spec_validation():
+    with pytest.raises(ValueError, match="optimizer"):
+        DistillSpec(optimizer="lion")
+    with pytest.raises(ValueError, match="schedule"):
+        DistillSpec(schedule="linear")
+    with pytest.raises(ValueError, match="harvest"):
+        DistillSpec(harvest=9, buffer=4)
+    with pytest.raises(ValueError, match="lr"):
+        DistillSpec(lr=0.0)
+    with pytest.raises(ValueError, match="every"):
+        DistillSpec(every=0)
+
+
+def test_distill_requires_fused_detector_path():
+    with pytest.raises(ValueError, match="fused"):
+        _run(True, provider_kwargs={"scene_seeds": [3, 5],
+                                    "fused": False})
+
+
+# ---------------------------------------------------------------------------
+# invariant 1: distill off is the exact pre-learning program
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("provider,kw", [
+    ("tables", {}),
+    ("scene", {}),
+    ("detector", {"shortlist_k": 9}),
+])
+def test_distill_off_decision_parity(provider, kw):
+    """distill=False / {"enabled": False} normalize to None on every
+    provider, so the episode compiles the exact frozen program —
+    bit-identical decisions, no learning surface on the result."""
+    def go(distill):
+        spec = FleetRunSpec(provider=provider, n_cameras=2, n_steps=5,
+                            budget={"fps": 2.0}, distill=distill, **kw)
+        assert spec.distill is None
+        return run_fleet(spec)
+
+    base, off, dis = go(None), go(False), go({"enabled": False})
+    for r in (off, dis):
+        np.testing.assert_array_equal(np.asarray(base.out.chosen),
+                                      np.asarray(r.out.chosen))
+        np.testing.assert_array_equal(np.asarray(base.out.pred_acc),
+                                      np.asarray(r.out.pred_acc))
+        assert r.distill_loss is None and r.learned is None
+        with pytest.raises(ValueError, match="distill"):
+            r.learned_params()
+
+
+def test_distill_on_changes_detector_decisions():
+    """The counterpart pin: learning is NOT decision-invisible — the
+    whole point is that trained heads re-rank the shortlist."""
+    off, on = _run(None), _run(True)
+    assert not np.array_equal(np.asarray(off.out.pred_acc),
+                              np.asarray(on.out.pred_acc))
+
+
+# ---------------------------------------------------------------------------
+# invariant 2: learning is per-camera / fleet-size independent
+# ---------------------------------------------------------------------------
+
+def test_learning_fleet_size_independent():
+    """Camera seed 5 learns the identical trajectory whether it rides an
+    F=1 or an F=2 fleet: same decisions, same per-step distill loss,
+    same learned head params. Gradients must never cross the fleet
+    axis (the per-camera grad clip and vmapped loss guarantee it)."""
+    r1 = _run(True, n_cameras=1, seeds=(5,))
+    r2 = _run(True, n_cameras=2, seeds=(3, 5))
+    np.testing.assert_array_equal(np.asarray(r1.out.chosen[:, 0]),
+                                  np.asarray(r2.out.chosen[:, 1]))
+    np.testing.assert_allclose(np.asarray(r1.out.pred_acc[:, 0]),
+                               np.asarray(r2.out.pred_acc[:, 1]),
+                               atol=1e-6)
+    _, c1 = r1.learned
+    _, c2 = r2.learned
+    for l1, l2 in zip(jax.tree.leaves(c1[2].params),
+                      jax.tree.leaves(c2[2].params)):
+        np.testing.assert_allclose(np.asarray(l1[0]), np.asarray(l2[1]),
+                                   atol=1e-6)
+
+
+def test_harvest_fleet_size_independent():
+    """Pure-function level: harvesting camera rows [i] through the ring
+    is row-wise — an F=3 harvest equals three F=1 harvests."""
+    rng = np.random.default_rng(0)
+    f, k, b, h, mb = 3, 6, 4, 2, 5
+    buf = init_pair_buffer(f, b, (7,), mb)
+    staged = jnp.asarray(rng.normal(size=(f, k, 7)), jnp.float32)
+    widx = jnp.asarray(rng.permuted(
+        np.tile(np.arange(k), (f, 1)), axis=1), jnp.int32)
+    sel = widx[:, :h]
+    ok = jnp.asarray([[True, True], [True, False], [False, False]])
+    boxes = jnp.asarray(rng.normal(size=(f, h, mb, 4)), jnp.float32)
+    cls = jnp.zeros((f, h, mb), jnp.int32)
+    val = jnp.asarray(rng.random((f, h, mb)) > 0.5)
+
+    full = harvest_into_buffer(buf, staged, widx, sel, ok, boxes, cls,
+                               val)
+    for i in range(f):
+        sl = jax.tree.map(lambda a, i=i: a[i:i + 1], buf)
+        one = harvest_into_buffer(
+            sl, staged[i:i + 1], widx[i:i + 1], sel[i:i + 1],
+            ok[i:i + 1], boxes[i:i + 1], cls[i:i + 1], val[i:i + 1])
+        for la, lb in zip(jax.tree.leaves(one), jax.tree.leaves(
+                jax.tree.map(lambda a, i=i: a[i:i + 1], full))):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # rows whose selection was all-invalid write nothing
+    assert int(full.ptr[2]) == 0
+    assert float(full.weight[2].sum()) == 0.0
+
+
+def test_select_sent_windows_prefers_chosen_then_sent():
+    out = type("O", (), {})()
+    out.sent = jnp.asarray([[True, False, True, True]])
+    out.pred_acc = jnp.asarray([[0.9, 0.8, 0.2, 0.5]])
+    out.chosen = jnp.asarray([2])
+    out.zooms = jnp.asarray([[0, 1, 2, 1]])
+    widx, ok = select_sent_windows(out, 3, 3)
+    # chosen cell 2 outranks the higher-scoring sent cell 0; cell 1
+    # was never sent so only 3 sent cells are valid
+    assert widx[0, 0] == 2 * 3 + 2          # chosen first
+    assert widx[0, 1] == 0 * 3 + 0
+    assert bool(ok.all())
+    _, ok2 = select_sent_windows(out, 3, 4)
+    assert not bool(ok2[0, 3])              # 4th slot has no sent window
+
+
+# ---------------------------------------------------------------------------
+# head-only mode: non-head params bit-unchanged
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return DetectorConfig(name="tiny", img_res=32, patch=16, d_model=16,
+                          n_layers=1, n_heads=2, d_ff=32, fpn_dim=8,
+                          n_classes=2, max_boxes=4)
+
+
+def test_head_mask_zeroes_backbone_updates():
+    """finetune_update (the rule core/continual.finetune_step delegates
+    to) must leave every backbone leaf bit-identical."""
+    from repro.core.continual import finetune_step, init_finetune
+    from repro.models.detector import detector_init
+
+    cfg = _tiny_cfg()
+    params = detector_init(jax.random.PRNGKey(0), cfg)
+    opt = init_finetune(params)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    boxes = jnp.tile(jnp.asarray([0.5, 0.5, 0.4, 0.4]), (2, 4, 1))
+    cls = jnp.zeros((2, 4), jnp.int32)
+    valid = jnp.ones((2, 4), bool)
+    new, _, loss = finetune_step(params, opt, cfg, imgs, boxes, cls,
+                                 valid)
+    assert np.isfinite(float(loss))
+    for a, b in zip(jax.tree.leaves(params["backbone"]),
+                    jax.tree.leaves(new["backbone"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(params["heads"]),
+                               jax.tree.leaves(new["heads"])))
+
+
+def test_episode_backbone_bit_unchanged():
+    """Head-only distillation trains ONLY the per-camera heads: the
+    merged checkpoint's backbone is the original shared pytree, and the
+    heads moved."""
+    r = _run(True, n_steps=6)
+    provider, _ = r.learned
+    learned = r.learned_params(0)
+    for a, b in zip(jax.tree.leaves(provider.det_params["backbone"]),
+                    jax.tree.leaves(learned["backbone"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(provider.det_params["heads"]),
+                               jax.tree.leaves(learned["heads"])))
+
+
+def test_idle_cameras_are_bit_exact_noops():
+    """A camera whose ring is empty passes through distill_update with
+    params AND optimizer moments untouched (AdamW decay must not drift
+    idle heads), and reports the -1 loss sentinel."""
+    cfg = _tiny_cfg()
+    from repro.models.detector import detector_init
+
+    det_params = detector_init(jax.random.PRNGKey(0), cfg)
+    d = DistillSpec(buffer=2, harvest=1)
+    lc = init_learn(d, cfg, det_params, 2, 3)
+    g = cfg.img_res // cfg.patch
+    # fill only camera 0's ring
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, g, g, cfg.fpn_dim))
+    buf = lc.buf._replace(
+        x=lc.buf.x.at[0].set(x),
+        boxes=lc.buf.boxes.at[0, :, 0].set(
+            jnp.asarray([0.5, 0.5, 0.5, 0.5])),
+        valid=lc.buf.valid.at[0, :, 0].set(True),
+        weight=lc.buf.weight.at[0].set(1.0))
+    lc = lc._replace(buf=buf)
+    new, loss = distill_update(d, cfg, lc)
+    assert float(loss[0]) >= 0.0 and float(loss[1]) == -1.0
+    for leaf_new, leaf_old in zip(jax.tree.leaves(new.params),
+                                  jax.tree.leaves(lc.params)):
+        np.testing.assert_array_equal(np.asarray(leaf_new[1]),
+                                      np.asarray(leaf_old[1]))
+        assert not np.array_equal(np.asarray(leaf_new[0]),
+                                  np.asarray(leaf_old[0]))
+    for leaf_new, leaf_old in zip(jax.tree.leaves(new.opt.mu),
+                                  jax.tree.leaves(lc.opt.mu)):
+        if leaf_new.ndim == 0:      # masked-out leaves carry no state
+            continue
+        np.testing.assert_array_equal(np.asarray(leaf_new[1]),
+                                      np.asarray(leaf_old[1]))
+
+
+# ---------------------------------------------------------------------------
+# episode integration: losses, metrics, checkpoints
+# ---------------------------------------------------------------------------
+
+def test_distill_episode_losses_and_metrics():
+    r = _run(True, n_steps=8, metrics=True)
+    loss = np.asarray(r.distill_loss, np.float32)
+    assert loss.shape == (8,)
+    upd = loss[loss >= 0]
+    assert upd.size > 0 and np.isfinite(upd).all()
+    # per-step metrics carry the raw [E, F] loss/lr streams
+    assert np.asarray(r.metrics["distill_loss"]).shape == (8, 2)
+    np.testing.assert_allclose(np.asarray(r.metrics["distill_lr"]),
+                               DistillSpec().lr, rtol=1e-6)
+    from repro.obs import summarize_metrics
+    s = summarize_metrics(r.metrics)
+    assert len(s["distill_loss_mean"]) == 2
+    assert s["distill_update_steps"][0] > 0
+
+
+def test_update_cadence_gates_steps():
+    r = _run({"every": 4}, n_steps=8)
+    loss = np.asarray(r.distill_loss, np.float32)
+    # steps are 1-based post-increment: updates land on steps 4, 8 ->
+    # indices 3, 7; everything else is the skipped sentinel
+    assert (loss[[0, 1, 2, 4, 5, 6]] == -1.0).all()
+    assert (loss[[3, 7]] >= 0).all()
+
+
+def test_learned_params_npz_roundtrip(tmp_path):
+    from repro.fleet import load_detector_params
+
+    r = _run(True, n_steps=6)
+    path = r.save_learned_params(str(tmp_path / "cam1.npz"), camera=1)
+    loaded = load_detector_params(path)
+    want = r.learned_params(1)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(loaded)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    # and the checkpoint boots a frozen provider (the deploy path)
+    r2 = _run(None, n_steps=2, provider_kwargs={
+        "scene_seeds": [3, 5], "det_params": path})
+    assert r2.out is not None
+
+
+def test_result_json_drops_learning_payload():
+    r = _run(True, n_steps=4)
+    d = json.loads(r.to_json())
+    assert "learned" not in d
+    assert d["distill_loss"] is not None
+    from repro.fleet import FleetResult
+    rt = FleetResult.from_json(r.to_json())
+    assert rt.distill_loss == r.distill_loss
+    assert rt.learned is None and rt.spec.distill == DistillSpec()
+
+
+def test_serve_distill_subprocess():
+    """`serve --fleet 2 --provider detector --distill` end to end."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--fps", "2",
+         "--duration", "3", "--fleet", "2", "--provider", "detector",
+         "--shortlist-k", "9", "--distill"],
+        capture_output=True, text=True, timeout=540, env=env, cwd=root)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "distill:" in proc.stdout
+    # the flag is rejected without a detector fleet
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--fps", "2",
+         "--duration", "1", "--fleet", "2", "--distill"],
+        capture_output=True, text=True, timeout=540, env=env, cwd=root)
+    assert bad.returncode != 0
+    assert "--distill" in bad.stderr
